@@ -1,0 +1,132 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline from
+experiments/dryrun/*.json.  §Perf iterations and §Paper-repro are appended
+by hand as the hillclimb proceeds (hypothesis → change → before → after).
+
+Usage:  PYTHONPATH=src python -m benchmarks.build_report [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.roofline_report import load_records
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}TiB"
+
+
+def dryrun_section(recs: list[dict]) -> str:
+    out = ["## §Dry-run\n"]
+    out.append(
+        "Every (architecture × input shape × mesh) lowered **and compiled**\n"
+        "with ShapeDtypeStruct inputs (no allocation). `train_4k` lowers the\n"
+        "full DRSGDA step (gossip + tracking + retraction) on the per-arch\n"
+        "(node, fsdp, model) refinement of the 16×16(×2) grid; decode shapes\n"
+        "lower `serve_step` (1 token vs a seq_len cache) on the canonical\n"
+        "mesh; `long_500k` uses the documented SWA variant on\n"
+        "full-attention archs. Per-device payloads below; compile times are\n"
+        "CPU-host (512 placeholder devices).\n")
+    out.append("| arch | shape | mesh | chips | variant | args/dev | temps/dev "
+               "| HLO GFLOPs/dev | collective MiB/dev | compile_s |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"],
+                                         SHAPE_ORDER.index(r["shape"]),
+                                         r["mesh"])):
+        ma = r.get("memory_analysis", {})
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} "
+            f"| {r.get('variant') or '-'} "
+            f"| {_fmt_bytes(ma.get('argument_size_in_bytes'))} "
+            f"| {_fmt_bytes(ma.get('temp_size_in_bytes'))} "
+            f"| {rl['flops_per_dev'] / 1e9:.1f} "
+            f"| {rl['collective_bytes_per_dev'] / 2**20:.1f} "
+            f"| {r.get('compile_s', '-')} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def roofline_section(recs: list[dict]) -> str:
+    out = ["## §Roofline\n"]
+    out.append(
+        "v5e terms per device: compute = FLOPs/197e12, memory = "
+        "bytes/819e9, collective = collective_bytes/50e9 (GB/s/link ICI).\n"
+        "`useful` = MODEL_FLOPS (6·N_active·D train, 2·N_active·D decode) / "
+        "global HLO FLOPs — <1 means remat/dispatch overhead, >1 means\n"
+        "sub-quadratic attention beats the dense-FLOPs model.  Single-pod\n"
+        "table (the multi-pod pass proves the pod axis shards; see §Dry-run).\n")
+    out.append("| arch | shape | compute_s | memory_s | collective_s | "
+               "dominant | useful | bottleneck note |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sorted([r for r in recs if r["mesh"] == "single"],
+                    key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))):
+        rl = r["roofline"]
+        uf = r.get("useful_fraction")
+        note = _note(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} "
+            f"| {rl['memory_s']:.3e} | {rl['collective_s']:.3e} "
+            f"| **{rl['dominant']}** | "
+            f"{uf:.3f} | {note} |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} "
+            f"| {rl['memory_s']:.3e} | {rl['collective_s']:.3e} "
+            f"| **{rl['dominant']}** | - | {note} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def _note(r: dict) -> str:
+    rl = r["roofline"]
+    dom = rl["dominant"]
+    cb = rl.get("collective_breakdown", {})
+    if dom == "collective" and cb:
+        top = max(cb, key=cb.get)
+        return (f"{top} dominates ({cb[top] / 2**20:.0f} MiB/dev) — reduce "
+                "via sharding/gossip schedule")
+    if dom == "memory":
+        return "HBM-bound: fuse/bf16/cache layout are the levers"
+    return "compute-bound: near roofline, MXU utilization is the lever"
+
+
+def build(recs) -> str:
+    return dryrun_section(recs) + "\n" + roofline_section(recs)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="rewrite the §Dry-run/§Roofline block in EXPERIMENTS.md")
+    args = ap.parse_args()
+    recs = load_records()
+    text = build(recs)
+    if args.write:
+        path = os.path.join(ROOT, "EXPERIMENTS.md")
+        marker_a = "<!-- AUTOGEN:DRYRUN-ROOFLINE:BEGIN -->"
+        marker_b = "<!-- AUTOGEN:DRYRUN-ROOFLINE:END -->"
+        if os.path.exists(path):
+            cur = open(path).read()
+        else:
+            cur = f"# EXPERIMENTS\n\n{marker_a}\n{marker_b}\n"
+        if marker_a in cur:
+            pre = cur.split(marker_a)[0]
+            post = cur.split(marker_b)[1]
+            cur = pre + marker_a + "\n" + text + "\n" + marker_b + post
+        else:
+            cur += f"\n{marker_a}\n{text}\n{marker_b}\n"
+        with open(path, "w") as f:
+            f.write(cur)
+        print(f"wrote {path} ({len(recs)} records)")
+    else:
+        print(text)

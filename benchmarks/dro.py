@@ -1,0 +1,62 @@
+"""Paper supplementary experiment — distributionally robust optimization
+with orthonormal weights (Eq. 21): DRSGDA vs GNSD-A / DM-HSGD on the
+heterogeneous classification stream, ring of n=20."""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import OPTIMIZERS
+from repro.core.baselines import HSGDHyper
+from repro.core.gda import GDAHyper, broadcast_to_nodes
+from repro.core.gossip import GossipSpec
+from repro.core.metric import convergence_metric
+from repro.data.synthetic import ClassificationStream
+from repro.objectives import fair
+
+N_NODES = 20
+
+
+def run_method(name: str, steps: int, seed: int = 0) -> dict:
+    stream = ClassificationStream(n_nodes=N_NODES, batch_per_node=32,
+                                  seed=seed, hetero=0.9)
+    params = fair.init_cnn(jax.random.PRNGKey(seed), image_hw=stream.image_hw)
+    problem = fair.make_dro_problem(params)
+    x0 = broadcast_to_nodes(params, N_NODES)
+    y0 = jnp.full((N_NODES, 3), 1.0 / 3.0)
+    spec = GossipSpec(topology="ring", n_nodes=N_NODES, k_steps=1)
+    cls = OPTIMIZERS[name]
+    opt = cls(problem, spec, HSGDHyper(beta=0.05, eta=0.2)) \
+        if name == "dm-hsgd" else \
+        cls(problem, spec, GDAHyper(alpha=0.5, beta=0.05, eta=0.2))
+
+    to_jax = lambda b: {k: jnp.asarray(v) for k, v in b.items()}
+    state = opt.init(x0, y0, to_jax(stream.batch(0)))
+    step_fn = opt.make_step(donate=False)
+    curve = []
+    t0 = time.time()
+    eval_batch = to_jax(stream.full(2))
+    for t in range(steps):
+        state, metrics = step_fn(state, to_jax(stream.batch(t + 1)))
+        if (t + 1) % 10 == 0 or t == 0:
+            m = convergence_metric(problem, state.x, state.y, eval_batch)
+            curve.append({"step": t + 1, "loss": float(metrics.loss),
+                          "M_t": float(m["M_t"]),
+                          "worst_group_weight": float(jnp.max(state.y))})
+    return {"method": name, "curve": curve,
+            "final_loss": curve[-1]["loss"], "final_M_t": curve[-1]["M_t"],
+            "us_per_step": (time.time() - t0) / steps * 1e6}
+
+
+def run(steps: int = 120) -> dict:
+    # equal sample budget: DM-HSGD does two grad passes per step
+    return {"dro": [run_method("drsgda", steps),
+                    run_method("gnsd-a", steps),
+                    run_method("dm-hsgd", steps // 2)]}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,70 @@
+"""Roofline table builder: reads experiments/dryrun/*.json (written by
+``python -m repro.launch.dryrun``) and emits the §Roofline table rows —
+three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful fraction."""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def load_records(d: str = DRYRUN_DIR) -> list[dict]:
+    if not os.path.isdir(d):
+        return []
+    recs = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def table(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "variant": r.get("variant", ""),
+            "chips": r["chips"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "useful_fraction": r.get("useful_fraction"),
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | variant | compute_s | memory_s | "
+           "collective_s | dominant | useful_frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        uf = r["useful_fraction"]
+        body += (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                 f"{r['variant'] or '-'} | {r['compute_s']:.3e} | "
+                 f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+                 f"**{r['dominant']}** | "
+                 f"{uf:.3f} |\n" if uf is not None else
+                 f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                 f"{r['variant'] or '-'} | {r['compute_s']:.3e} | "
+                 f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+                 f"**{r['dominant']}** | - |\n")
+    return hdr + body
+
+
+def run() -> dict:
+    recs = load_records()
+    rows = table(recs)
+    dominants = {}
+    for r in rows:
+        dominants[r["dominant"]] = dominants.get(r["dominant"], 0) + 1
+    return {"n_records": len(rows), "dominant_histogram": dominants,
+            "rows": rows}
+
+
+if __name__ == "__main__":
+    print(markdown(run()["rows"]))

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's algorithm (DRGDA) on a 30-line Stiefel minimax.
+
+Robust PCA-flavoured toy:  min_{x in St(12,3)} max_{y in simplex_3}
+sum_g y_g (-tr(x^T A_g x)) - ||y - 1/3||^2 over an 8-node ring.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DRGDA, GDAHyper, GossipSpec, MinimaxProblem
+from repro.core import manifolds as M
+from repro.core.gda import broadcast_to_nodes
+from repro.core.metric import convergence_metric
+from repro.core.minimax import project_simplex
+
+D, R, G, N = 12, 3, 3, 8
+rng = np.random.default_rng(0)
+A = rng.normal(size=(G, D, D))
+A = jnp.asarray((A + np.swapaxes(A, 1, 2)) / 2, jnp.float32)
+
+
+def loss_fn(x, y, batch):                     # one node's local objective
+    lg = -jnp.einsum("dr,gde,er->g", x["w"], A + batch, x["w"])
+    return jnp.dot(y, lg) - jnp.sum((y - 1.0 / G) ** 2)
+
+
+def y_star(x, batches):                       # closed-form inner maximizer
+    lg = -jnp.einsum("dr,gde,er->g", x["w"], A + batches.mean(0), x["w"])
+    return project_simplex(1.0 / G + lg / 2.0)
+
+
+problem = MinimaxProblem(loss_fn=loss_fn, project_y=project_simplex,
+                         stiefel_mask={"w": True}, y_star=y_star)
+opt = DRGDA(problem, GossipSpec(topology="ring", n_nodes=N),
+            GDAHyper(alpha=0.5, beta=0.05, eta=0.2))
+
+x0 = broadcast_to_nodes({"w": M.random_stiefel(jax.random.PRNGKey(0), D, R)}, N)
+y0 = jnp.full((N, G), 1.0 / G)
+batches = 0.05 * jax.random.normal(jax.random.PRNGKey(1), (N, G, D, D))
+
+state = opt.init(x0, y0, batches)
+step = opt.make_step(donate=False)
+for t in range(200):
+    state, metrics = step(state, batches)
+    if t % 50 == 0:
+        m = convergence_metric(problem, state.x, state.y, batches)
+        print(f"step {t:4d}  loss={metrics.loss:+.4f}  M_t={m['M_t']:.2e}  "
+              f"consensus={m['consensus_x']:.2e}  "
+              f"St-residual={m['stiefel_residual']:.2e}")
+
+m = convergence_metric(problem, state.x, state.y, batches)
+print(f"final M_t = {float(m['M_t']):.3e}  (stationary + consensus + "
+      f"inner-opt, Eq. 16)")
+assert float(m["M_t"]) < 1e-3

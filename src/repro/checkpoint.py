@@ -1,0 +1,86 @@
+"""Minimal dependency-free pytree checkpointing (npz + path manifest).
+
+Layout:  <dir>/step_<n>.npz  with keys 'p<i>' in flatten order, plus a
+'__paths__' manifest array for structural validation on restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _paths(tree: PyTree) -> list[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, _ in flat:
+        parts = []
+        for k in path:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append("/".join(parts))
+    return out
+
+
+def save(directory: str, step: int, tree: PyTree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves = jax.tree.leaves(tree)
+    arrays, dtypes = {}, []
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+            # npz cannot roundtrip extended dtypes (bf16 etc.) — store the
+            # raw bits and re-view on restore using the dtype manifest.
+            a = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+        arrays[f"p{i}"] = a
+    arrays["__paths__"] = np.array(json.dumps(_paths(tree)))
+    arrays["__dtypes__"] = np.array(json.dumps(dtypes))
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (validates the path manifest)."""
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    data = np.load(path, allow_pickle=False)
+    want = _paths(like)
+    have = json.loads(str(data["__paths__"]))
+    if want != have:
+        raise ValueError(
+            f"checkpoint structure mismatch: {len(have)} leaves saved vs "
+            f"{len(want)} expected; first diff: "
+            f"{next((a, b) for a, b in zip(have + [''], want + ['']) if a != b)}")
+    dtypes = json.loads(str(data["__dtypes__"])) if "__dtypes__" in data \
+        else [None] * len(want)
+    leaves = []
+    for i in range(len(want)):
+        a = data[f"p{i}"]
+        dt = dtypes[i]
+        if dt is not None and str(a.dtype) != dt:
+            import ml_dtypes
+            a = a.view(np.dtype(getattr(ml_dtypes, dt, dt)))
+        leaves.append(jnp.asarray(a))
+    return jax.tree.unflatten(jax.tree.structure(like), leaves)

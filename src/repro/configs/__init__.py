@@ -1,0 +1,130 @@
+"""Config registry: the 10 assigned architectures (+ paper CNN) and the
+4 input shapes, plus ShapeDtypeStruct input specs for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (INPUT_SHAPES, AttnSpec, BlockSpec, InputShape,
+                                MeshPlan, ModelConfig, Stage)
+
+_MODULES = {
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "xlstm-1.3b": "repro.configs.xlstm_1p3b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+# ---------------------------------------------------------------------------
+# long-context variant: cap every full-attention layer with a sliding window
+# ---------------------------------------------------------------------------
+
+LONG_CONTEXT_WINDOW = 16384
+
+
+def long_context_override(cfg: ModelConfig,
+                          window: int = LONG_CONTEXT_WINDOW) -> ModelConfig:
+    """Replace unbounded attention with a sliding window (block-sparse
+    variant used only for the ``long_500k`` shape on attention archs; native
+    SSM/hybrid layers are untouched).  Recorded as a VARIANT in
+    EXPERIMENTS.md, not the paper arch."""
+
+    def fix_block(b: BlockSpec) -> BlockSpec:
+        if b.kind in ("attn", "moe_attn") and b.attn.sliding_window is None:
+            return dataclasses.replace(
+                b, attn=dataclasses.replace(b.attn, sliding_window=window))
+        return b
+
+    stages = tuple(
+        dataclasses.replace(st, blocks=tuple(fix_block(b) for b in st.blocks))
+        for st in cfg.stages)
+    return dataclasses.replace(cfg, stages=stages,
+                               name=cfg.name + f"+swa{window}")
+
+
+def needs_long_context_override(cfg: ModelConfig) -> bool:
+    return any(b.kind in ("attn", "moe_attn") and b.attn.sliding_window is None
+               for st in cfg.stages for b in st.blocks)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str,
+                n_nodes: Optional[int] = None,
+                activation_dtype=jnp.bfloat16) -> dict:
+    """Stand-ins for every model input of (cfg, shape).
+
+    * train: node-stacked {tokens, group_ids[, frontend_embeds]} — leading
+      axis ``n_nodes`` (required), per-node batch = global_batch / n_nodes.
+    * prefill: global {tokens[, frontend_embeds]}.
+    * decode: {token, position, cache} for ``serve_step`` — the cache holds
+      ``seq_len`` entries (positions 0..seq_len-2 filled, one slot for the
+      new token at position seq_len-1).
+    """
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape: tuple[int, ...]
+
+    if shape.mode == "train":
+        assert n_nodes, "train specs need n_nodes"
+        assert b % n_nodes == 0, (b, n_nodes)
+        pb = b // n_nodes
+        tok = (n_nodes, pb, s) if cfg.n_codebooks == 1 else \
+            (n_nodes, pb, s, cfg.n_codebooks)
+        out = {"tokens": _sds(tok, jnp.int32),
+               "group_ids": _sds((n_nodes, pb), jnp.int32)}
+        if cfg.frontend is not None:
+            out["frontend_embeds"] = _sds(
+                (n_nodes, pb, cfg.frontend.n_tokens, cfg.frontend.embed_dim),
+                activation_dtype)
+        return out
+
+    if shape.mode == "prefill":
+        tok = (b, s) if cfg.n_codebooks == 1 else (b, s, cfg.n_codebooks)
+        out = {"tokens": _sds(tok, jnp.int32)}
+        if cfg.frontend is not None:
+            out["frontend_embeds"] = _sds(
+                (b, cfg.frontend.n_tokens, cfg.frontend.embed_dim),
+                activation_dtype)
+        return out
+
+    # decode
+    from repro.models import transformer as T  # local import (cycle-free)
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, s, dtype=activation_dtype))
+    tok = (b,) if cfg.n_codebooks == 1 else (b, cfg.n_codebooks)
+    out = {"token": _sds(tok, jnp.int32),
+           "position": _sds((b,), jnp.int32),
+           "cache": cache}
+    if cfg.frontend is not None:
+        out["frontend_embeds"] = _sds(
+            (b, cfg.frontend.n_tokens, cfg.frontend.embed_dim),
+            activation_dtype)
+    return out

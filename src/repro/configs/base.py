@@ -1,0 +1,211 @@
+"""Config schema: architectures, block programs, mesh factorizations, shapes.
+
+A model is described as a *program*: an ordered list of :class:`Stage`s, each
+a supercell of distinct block specs repeated ``repeat`` times.  Repeats are
+executed with ``jax.lax.scan`` over layer-stacked parameters, which keeps
+compile time flat in depth (60-layer models compile one supercell body).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Sequence
+
+BlockKind = Literal["attn", "moe_attn", "mamba", "mlstm", "slstm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Attention flavour for one block."""
+    kind: Literal["gqa", "mla"] = "gqa"
+    sliding_window: Optional[int] = None      # None => full causal
+    cross_attn: bool = False                  # adds a cross-attn sublayer (VLM)
+    # MLA (DeepSeek-V2) dims — used when kind == "mla"
+    q_lora_rank: int = 0                      # 0 => no q compression
+    kv_lora_rank: int = 512
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int = 8
+    top_k: int = 2
+    d_expert: int = 0                  # expert hidden dim (d_ff of one expert)
+    n_shared: int = 0                  # always-on shared experts (DeepSeek-V2)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # §Perf knob: dispatch tokens in G independent groups (align G with the
+    # fsdp axis so sort/capacity/gather stay shard-local and the giant
+    # token all-gather disappears; capacity becomes per-group).
+    # -1 = per-sequence (batch-dim) groups.
+    dispatch_groups: int = 1
+    # §Perf knob: name the group axis as an SPMD mesh axis so the
+    # partitioner pins the vmapped dispatch to it (requires the axis to
+    # exist in the active mesh, e.g. "fsdp" on the training mesh).
+    dispatch_spmd_axis: str = ""
+    # §Perf knob: pin the dispatched (E, C, d) expert activations' E dim to
+    # this mesh axis with an explicit sharding constraint — without it
+    # GSPMD REPLICATES xe/h across all devices (300 GiB/layer f32 for
+    # DeepSeek-V2) instead of resharding to the expert-parallel layout.
+    expert_shard_axis: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    """Mamba2 (SSD) block."""
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMSpec:
+    """mLSTM / sLSTM cells (xLSTM)."""
+    proj_factor: float = 2.0       # mLSTM up-projection
+    conv_window: int = 4
+    chunk: int = 256
+    slstm_proj_factor: float = 4.0 / 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: BlockKind = "attn"
+    attn: Optional[AttnSpec] = None
+    moe: Optional[MoESpec] = None
+    ssm: Optional[SSMSpec] = None
+    xlstm: Optional[XLSTMSpec] = None
+    has_mlp: bool = True               # dense MLP (ignored for moe/mamba/xlstm)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    blocks: tuple[BlockSpec, ...]      # one supercell
+    repeat: int = 1                    # scanned repeats
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendSpec:
+    """Stubbed modality frontend (the one allowed carve-out): provides
+    precomputed embeddings of the right shape via input_specs()."""
+    kind: Literal["vision", "audio_cond"] = "vision"
+    n_tokens: int = 576                # image patch tokens / conditioning frames
+    embed_dim: int = 1152              # frontend output dim (projected to d_model)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Factorization of the per-pod 256-chip grid into logical axes.
+
+    node * fsdp * model == 256.  ``node`` is the decentralized (gossip)
+    dimension; ``fsdp`` shards each node's replica; ``model`` is tensor/
+    expert parallelism.  Multi-pod runs add a leading pod axis and extend the
+    gossip ring across pods.
+    """
+    node: int = 16
+    fsdp: int = 1
+    model: int = 16
+
+    def __post_init__(self):
+        assert self.node * self.fsdp * self.model == 256, \
+            f"mesh plan must cover 256 chips/pod, got {self}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: Literal["dense", "moe", "hybrid", "vlm", "audio", "ssm"] = "dense"
+    d_model: int = 512
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    d_ff: int = 2048
+    vocab_size: int = 32000
+    head_dim: int = 0                  # 0 => d_model // n_heads
+    stages: tuple[Stage, ...] = ()
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    n_codebooks: int = 1               # musicgen: 4 parallel EnCodec streams
+    frontend: Optional[FrontendSpec] = None
+    max_seq_len: int = 131072
+    # which parameters live on St(d, r): path-regex over '/'-joined key paths.
+    # Only tall/square (d >= r) matches are constrained (the mask builder
+    # filters); the rest stay Euclidean — see DESIGN.md §Arch-applicability.
+    manifold_policy: str = (
+        r"attn/(wq|wk|wv|wo|w_dq|w_dkv)$|mlstm/(wq|wk|wv|w_down)$")
+    # DRO group count for the minimax objective
+    n_groups: int = 8
+    rho: float = 1.0                   # strong-concavity coefficient (Eq. 20/21)
+    mesh_plan: MeshPlan = MeshPlan()
+    remat: bool = True
+    dtype: str = "bfloat16"
+    # lax.scan over stage repeats (production).  The dry-run's differential
+    # cost analysis compiles shallow UNROLLED variants (use_scan=False)
+    # because XLA cost_analysis counts a while-loop body once, not
+    # trip_count times.
+    use_scan: bool = True
+    # §Perf knob: "gather" = take_along_axis on the (vocab-sharded) logits;
+    # "dot" = one-hot contraction (partial sums + small all-reduce, no
+    # logits all-gather when the vocab dim is model-sharded).
+    ce_impl: str = "gather"
+    # §Perf knob: pad embedding/unembedding rows to a multiple of this so
+    # an odd vocab (granite: 49155) becomes model-axis-shardable and the
+    # full-logits all-reduce disappears (Megatron-style vocab padding).
+    # 0 = no padding.  Loss masks the padded logits.
+    vocab_pad_to: int = 0
+
+    @property
+    def padded_vocab(self) -> int:
+        if self.vocab_pad_to <= 0:
+            return self.vocab_size
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(s.blocks) * s.repeat for s in self.stages)
+
+    def flat_blocks(self) -> list[BlockSpec]:
+        out: list[BlockSpec] = []
+        for s in self.stages:
+            out.extend(list(s.blocks) * s.repeat)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: Literal["train", "prefill", "decode"]
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def uniform_stages(block: BlockSpec, n_layers: int) -> tuple[Stage, ...]:
+    return (Stage(blocks=(block,), repeat=n_layers),)
+
+
+def patterned_stages(cell: Sequence[BlockSpec], n_layers: int) -> tuple[Stage, ...]:
+    """Repeat a supercell; a trailing partial cell becomes its own stage."""
+    c = len(cell)
+    full, rem = divmod(n_layers, c)
+    stages = []
+    if full:
+        stages.append(Stage(blocks=tuple(cell), repeat=full))
+    if rem:
+        stages.append(Stage(blocks=tuple(cell[:rem]), repeat=1))
+    return tuple(stages)

@@ -1,0 +1,41 @@
+"""SmolLM-135M [dense] — llama-architecture small model; also the
+end-to-end training driver arch.  [hf:HuggingFaceTB/SmolLM-135M]
+
+30L  d_model=576  9H (kv=3)  d_ff=1536  vocab=49152.
+
+Note: 9 heads do not divide the 16-way model axis — attention parameters
+are replicated over ``model`` (tiny model, data-parallel dominant) while
+MLP and vocab shard; see sharding/partition.py fallback rule.
+"""
+from repro.configs.base import (AttnSpec, BlockSpec, MeshPlan, ModelConfig,
+                                uniform_stages)
+
+_BLK = BlockSpec(kind="attn", attn=AttnSpec(kind="gqa"))
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=49152,
+    stages=uniform_stages(_BLK, 30),
+    n_groups=8,
+    mesh_plan=MeshPlan(node=16, fsdp=1, model=16),
+)
+
+SMOKE = ModelConfig(
+    name="smollm-135m-smoke",
+    family="dense",
+    d_model=96,
+    n_heads=3,
+    n_kv_heads=1,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=256,
+    stages=uniform_stages(_BLK, 2),
+    n_groups=4,
+    remat=False,
+)

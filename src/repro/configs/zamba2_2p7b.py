@@ -1,0 +1,44 @@
+"""Zamba2 2.7B [hybrid] — Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242]
+
+54L  d_model=2560  32H (kv=32)  d_ff=10240  ssm_state=64  vocab=32000.
+"""
+from repro.configs.base import (AttnSpec, BlockSpec, MeshPlan, ModelConfig,
+                                SSMSpec, patterned_stages)
+
+_MAMBA = BlockSpec(kind="mamba",
+                   ssm=SSMSpec(d_state=64, d_conv=4, expand=2, head_dim=64,
+                               n_groups=1, chunk=256))
+_ATTN = BlockSpec(kind="attn", attn=AttnSpec(kind="gqa"))
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    # 5 mamba : 1 shared-attention supercell; 54 = 6*9
+    stages=patterned_stages([_MAMBA] * 5 + [_ATTN], 54),
+    n_groups=8,
+    mesh_plan=MeshPlan(node=8, fsdp=2, model=16),
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-2.7b-smoke",
+    family="hybrid",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=256,
+    stages=patterned_stages(
+        [BlockSpec(kind="mamba",
+                   ssm=SSMSpec(d_state=8, head_dim=16, chunk=32)),
+         _ATTN], 2),
+    n_groups=4,
+    remat=False,
+)

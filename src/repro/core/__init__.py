@@ -1,0 +1,15 @@
+"""Core library: the paper's contribution as composable JAX modules."""
+from repro.core import baselines, gda, gossip, manifolds, metric, minimax  # noqa: F401
+from repro.core.baselines import DMHSGD, GNSDA, GTGDA, GTSRVR  # noqa: F401
+from repro.core.gda import DRGDA, DRSGDA, GDAHyper, GDAState  # noqa: F401
+from repro.core.gossip import GossipSpec  # noqa: F401
+from repro.core.minimax import MinimaxProblem  # noqa: F401
+
+OPTIMIZERS = {
+    "drgda": DRGDA,
+    "drsgda": DRSGDA,
+    "gt-gda": GTGDA,
+    "gnsd-a": GNSDA,
+    "dm-hsgd": DMHSGD,
+    "gt-srvr": GTSRVR,
+}

@@ -1,0 +1,199 @@
+"""Gossip / consensus substrate.
+
+Two execution paths for the mixing step ``x_i <- sum_j W_ij x_j``:
+
+* ``mix_dense``  — arbitrary doubly-stochastic ``W`` via einsum over the
+  (possibly sharded) leading node axis.  XLA lowers this to an all-gather on
+  the node axis + local contraction.  Used for torus / expander topologies
+  and in tests.
+* ``mix_ring``   — the paper's experimental topology (ring, n=20): one hop
+  touches only the two neighbours, expressed with ``jnp.roll`` along the node
+  axis, which XLA lowers to ``collective-permute`` on the TPU ICI ring.  This
+  is the TPU-native analogue of neighbour message passing and the default in
+  production configs.
+
+``W^k`` (the paper's multi-step gossip, Theorems 1/2 require
+k >= ceil(log_{lambda_2}(1/(2 sqrt n)))) is ``k`` repeated one-hop mixes.
+
+All mixing functions operate on pytrees whose leaves carry the node axis as
+axis 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+Topology = Literal["ring", "full", "torus", "star"]
+
+
+# ---------------------------------------------------------------------------
+# mixing matrices (numpy — built once at config time, static thereafter)
+# ---------------------------------------------------------------------------
+
+
+def ring_matrix(n: int, self_weight: float | None = None) -> np.ndarray:
+    """Symmetric doubly-stochastic ring: each node averages itself and its two
+    neighbours.  Default Metropolis weights => 1/3 each (n >= 3)."""
+    if n == 1:
+        return np.ones((1, 1))
+    if n == 2:
+        return np.full((2, 2), 0.5)
+    w_side = (1.0 - (self_weight if self_weight is not None else 1.0 / 3.0)) / 2.0
+    wc = self_weight if self_weight is not None else 1.0 / 3.0
+    w = np.zeros((n, n))
+    for i in range(n):
+        w[i, i] = wc
+        w[i, (i - 1) % n] = w_side
+        w[i, (i + 1) % n] = w_side
+    return w
+
+
+def full_matrix(n: int) -> np.ndarray:
+    return np.full((n, n), 1.0 / n)
+
+
+def torus_matrix(rows: int, cols: int) -> np.ndarray:
+    """2-D torus, Metropolis weights (degree 4)."""
+    n = rows * cols
+    w = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            nbrs = [((r - 1) % rows) * cols + c, ((r + 1) % rows) * cols + c,
+                    r * cols + (c - 1) % cols, r * cols + (c + 1) % cols]
+            for j in set(nbrs) - {i}:
+                w[i, j] = 1.0 / 5.0
+            w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+def star_matrix(n: int) -> np.ndarray:
+    """Star (centralized-like, for ablation): hub 0 <-> spokes."""
+    w = np.zeros((n, n))
+    for i in range(1, n):
+        w[0, i] = w[i, 0] = 1.0 / n
+        w[i, i] = 1.0 - 1.0 / n
+    w[0, 0] = 1.0 - (n - 1) / n
+    return w
+
+
+def mixing_matrix(topology: Topology, n: int) -> np.ndarray:
+    if topology == "ring":
+        return ring_matrix(n)
+    if topology == "full":
+        return full_matrix(n)
+    if topology == "star":
+        return star_matrix(n)
+    if topology == "torus":
+        rows = int(math.sqrt(n))
+        while n % rows:
+            rows -= 1
+        return torus_matrix(rows, n // rows)
+    raise ValueError(f"unknown topology {topology!r}")
+
+
+def second_largest_eigenvalue(w: np.ndarray) -> float:
+    """lambda := second-largest |eigenvalue| of W (spectral gap driver)."""
+    ev = np.sort(np.abs(np.linalg.eigvalsh(w)))[::-1]
+    return float(ev[1]) if len(ev) > 1 else 0.0
+
+
+def required_gossip_steps(w: np.ndarray, n: int | None = None) -> int:
+    """Paper's Theorem-1 prescription: k >= ceil( log_{lambda2} (1/(2 sqrt n)) ).
+
+    lambda2 < 1, so log base lambda2 flips the inequality; equivalently
+    k >= ln(2 sqrt n) / ln(1/lambda2).
+    """
+    n = n or w.shape[0]
+    lam = second_largest_eigenvalue(w)
+    if lam <= 0.0:
+        return 1
+    return max(1, int(math.ceil(math.log(2.0 * math.sqrt(n)) / math.log(1.0 / lam))))
+
+
+# ---------------------------------------------------------------------------
+# runtime mixing ops (jax)
+# ---------------------------------------------------------------------------
+
+
+def _mix_leaf_dense(w: Array, x: Array) -> Array:
+    return jnp.einsum("ij,j...->i...", w, x)
+
+
+def mix_dense(w: Array, tree, steps: int = 1):
+    """x <- W^steps x, arbitrary W, leading node axis on every leaf."""
+    def leaf(x):
+        def body(_, v):
+            return _mix_leaf_dense(w, v)
+        return jax.lax.fori_loop(0, steps, body, x) if steps > 1 else _mix_leaf_dense(w, x)
+    return jax.tree.map(leaf, tree)
+
+
+def _mix_leaf_ring(x: Array, wc: float, ws: float) -> Array:
+    # jnp.roll over the (sharded) node axis -> collective-permute on ICI.
+    return wc * x + ws * jnp.roll(x, 1, axis=0) + ws * jnp.roll(x, -1, axis=0)
+
+
+def mix_ring(tree, steps: int = 1, self_weight: float = 1.0 / 3.0):
+    """Ring gossip, ``steps`` hops.  Matches ring_matrix(n, self_weight)."""
+    ws = (1.0 - self_weight) / 2.0
+
+    def leaf(x):
+        if x.shape[0] == 1:
+            return x
+        if x.shape[0] == 2:  # ring of 2 == full averaging
+            def body2(_, v):
+                return 0.5 * (v + jnp.roll(v, 1, axis=0))
+            return jax.lax.fori_loop(0, steps, body2, x)
+        def body(_, v):
+            return _mix_leaf_ring(v, self_weight, ws)
+        return jax.lax.fori_loop(0, steps, body, x)
+    return jax.tree.map(leaf, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipSpec:
+    """Static description of the communication graph, carried by configs."""
+    topology: Topology = "ring"
+    n_nodes: int = 16
+    k_steps: int | None = None      # None => Theorem-1 prescription
+    self_weight: float = 1.0 / 3.0
+
+    @property
+    def matrix(self) -> np.ndarray:
+        if self.topology == "ring":
+            return ring_matrix(self.n_nodes, self.self_weight)
+        return mixing_matrix(self.topology, self.n_nodes)
+
+    @property
+    def lam2(self) -> float:
+        return second_largest_eigenvalue(self.matrix)
+
+    @property
+    def k(self) -> int:
+        if self.k_steps is not None:
+            return self.k_steps
+        return required_gossip_steps(self.matrix, self.n_nodes)
+
+    def mix(self, tree, steps: int | None = None):
+        """Apply W^steps (default: the spec's k) to a node-stacked pytree."""
+        s = self.k if steps is None else steps
+        if self.n_nodes == 1 or s == 0:
+            return tree
+        if self.topology == "ring":
+            return mix_ring(tree, steps=s, self_weight=self.self_weight)
+        w = jnp.asarray(self.matrix, dtype=jnp.float32)
+        return jax.tree.map(
+            lambda x: _mix_leaf_dense(jnp.linalg.matrix_power(w, s).astype(x.dtype), x)
+            if s > 1 else _mix_leaf_dense(w.astype(x.dtype), x),
+            tree,
+        )
+
+    def mix_once(self, tree):
+        return self.mix(tree, steps=1)

@@ -1,0 +1,149 @@
+"""Problem interface for decentralized Riemannian minimax optimization.
+
+A :class:`MinimaxProblem` packages everything the optimizers in
+:mod:`repro.core.gda` / :mod:`repro.core.baselines` need:
+
+  * ``loss_fn(x, y, batch) -> scalar``   — the *local* objective f_i of one
+    node (min over ``x``, max over ``y``);
+  * ``project_y``                        — Euclidean projection onto the
+    compact convex set ``Y`` (simplex, ball, box, ...);
+  * ``stiefel_mask``                     — pytree (same structure as ``x``)
+    of bools: True leaves live on St(d, r) (last two dims), False leaves are
+    Euclidean;
+  * optionally ``y_star(x, batch)``      — the exact inner maximizer, used by
+    the convergence metric M_t (Eq. 16). Available in closed form for the
+    paper's quadratic-in-y objectives (Eqs. 20, 21).
+
+The node dimension is *not* part of this interface: optimizers vmap the
+problem over the leading node axis themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import manifolds
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# projections onto common Y sets
+# ---------------------------------------------------------------------------
+
+
+def project_simplex(y: Array) -> Array:
+    """Euclidean projection onto the probability simplex (last axis).
+
+    Standard sort-based algorithm (Held et al.); O(k log k), jit-safe.
+    """
+    k = y.shape[-1]
+    u = jnp.sort(y, axis=-1)[..., ::-1]
+    css = jnp.cumsum(u, axis=-1) - 1.0
+    idx = jnp.arange(1, k + 1, dtype=y.dtype)
+    cond = u - css / idx > 0
+    rho = jnp.sum(cond, axis=-1, keepdims=True)  # >= 1 always
+    theta = jnp.take_along_axis(css, rho - 1, axis=-1) / rho.astype(y.dtype)
+    return jnp.maximum(y - theta, 0.0)
+
+
+def project_l2_ball(radius: float) -> Callable[[Array], Array]:
+    def proj(y: Array) -> Array:
+        nrm = jnp.linalg.norm(y, axis=-1, keepdims=True)
+        scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-12))
+        return y * scale
+    return proj
+
+
+def project_box(lo: float, hi: float) -> Callable[[Array], Array]:
+    return lambda y: jnp.clip(y, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# the problem container
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MinimaxProblem:
+    """min_{x in M} max_{y in Y} f(x, y; data) — one node's local view."""
+
+    loss_fn: Callable[[PyTree, Array, Any], Array]
+    project_y: Callable[[Array], Array]
+    stiefel_mask: PyTree
+    y_star: Optional[Callable[[PyTree, Any], Array]] = None
+    # aux outputs (per-group losses etc.) for logging; loss_fn_aux returns
+    # (loss, aux) when provided.
+    loss_fn_aux: Optional[Callable[[PyTree, Array, Any], tuple]] = None
+    name: str = "problem"
+
+    # -- gradients ---------------------------------------------------------
+    def grads(self, x: PyTree, y: Array, batch: Any) -> tuple[PyTree, Array]:
+        """(euclidean grad_x, grad_y) of the local loss at (x, y)."""
+        gx, gy = jax.grad(self.loss_fn, argnums=(0, 1))(x, y, batch)
+        return gx, gy
+
+    def rgrads(self, x: PyTree, y: Array, batch: Any) -> tuple[PyTree, Array]:
+        """(Riemannian grad_x, euclidean grad_y).
+
+        Stiefel leaves are tangent-projected at their own base point (this is
+        the ``grad_x f_i`` in Alg. 1 steps 2/6); Euclidean leaves pass
+        through.
+        """
+        gx, gy = self.grads(x, y, batch)
+        rgx = apply_masked(
+            self.stiefel_mask, x, gx,
+            stiefel_fn=manifolds.tangent_project,
+            eucl_fn=lambda _, g: g,
+        )
+        return rgx, gy
+
+    def value(self, x: PyTree, y: Array, batch: Any) -> Array:
+        return self.loss_fn(x, y, batch)
+
+
+def apply_masked(mask: PyTree, x: PyTree, g: PyTree, *, stiefel_fn, eucl_fn):
+    """tree_map dispatching on the per-leaf Stiefel mask."""
+    return jax.tree.map(
+        lambda m, xi, gi: stiefel_fn(xi, gi) if m else eucl_fn(xi, gi),
+        mask, x, g,
+    )
+
+
+def stiefel_mask_from_paths(params: PyTree, predicate: Callable[[str], bool]) -> PyTree:
+    """Build a bool mask pytree by matching flattened key-paths.
+
+    ``predicate`` receives a '/'-joined path string such as
+    ``'layers_0/attn/wq'``.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    vals = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        ok = bool(predicate(name)) and leaf.ndim >= 2 and leaf.shape[-2] >= leaf.shape[-1]
+        vals.append(ok)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def validate_stiefel(params: PyTree, mask: PyTree, atol: float = 1e-4) -> Array:
+    """Max feasibility residual over all Stiefel leaves (0.0 if none)."""
+    errs = [manifolds.stiefel_error(x).max()
+            for m, x in zip(jax.tree.leaves(mask), jax.tree.leaves(params)) if m]
+    if not errs:
+        return jnp.zeros(())
+    return jnp.max(jnp.stack(errs))

@@ -1,0 +1,1 @@
+from repro.data.synthetic import ClassificationStream, TokenStream  # noqa: F401

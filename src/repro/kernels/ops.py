@@ -1,0 +1,159 @@
+"""jit'd public wrappers for the Pallas kernels, with backend dispatch.
+
+Dispatch policy (per-call overridable with ``impl=``):
+
+  * ``tpu`` backend            -> Pallas kernel (compiled)
+  * anything else (CPU here)   -> pure-jnp oracle from ``ref.py`` — identical
+    semantics and matching FLOP structure, so the dry-run's cost_analysis is
+    representative.
+  * ``impl="pallas_interpret"``-> Pallas kernel body interpreted in Python
+    (the CPU validation path used by the kernel tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref
+from repro.kernels import ring_mix as _rm
+from repro.kernels import stiefel_project as _sp
+
+Array = jax.Array
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# flash attention — public layout (B, S, H, hd) to match the model code
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: Array, axis: int, mult: int, value=0) -> tuple[Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), pad
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None,
+                    q_positions: Array | None = None,
+                    kv_positions: Array | None = None,
+                    softmax_scale: float | None = None,
+                    impl: str | None = None,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_kv: int = _fa.DEFAULT_BLOCK_KV) -> Array:
+    """Attention over (B, S, H, hd) q and (B, T, Hkv, hd) k/v."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.blockwise_attention(
+            q, k, v, causal=causal, window=window, q_positions=q_positions,
+            kv_positions=kv_positions, softmax_scale=softmax_scale)
+    if impl == "ref_naive":
+        return ref.attention_naive(
+            q, k, v, causal=causal, window=window, q_positions=q_positions,
+            kv_positions=kv_positions, softmax_scale=softmax_scale)
+
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    qt = jnp.swapaxes(q, 1, 2)           # (B, H, S, hd)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    qt, pad_q = _pad_to(qt, 2, min(block_q, max(s, 1)))
+    kt, pad_kv = _pad_to(kt, 2, min(block_kv, max(t, 1)))
+    vt, _ = _pad_to(vt, 2, min(block_kv, max(t, 1)))
+    qp = jnp.pad(q_positions.astype(jnp.int32), ((0, 0), (0, qt.shape[2] - s)),
+                 constant_values=0)
+    kp = jnp.pad(kv_positions.astype(jnp.int32), ((0, 0), (0, kt.shape[2] - t)),
+                 constant_values=-1)
+
+    out = _fa.flash_attention_bhsd(
+        qt, kt, vt, qp, kp, causal=causal, window=window,
+        softmax_scale=softmax_scale,
+        block_q=min(block_q, qt.shape[2]), block_kv=min(block_kv, kt.shape[2]),
+        interpret=(impl == "pallas_interpret"))
+    out = jnp.swapaxes(out, 1, 2)
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# stiefel tangent projection
+# ---------------------------------------------------------------------------
+
+
+def stiefel_project(x: Array, g: Array, *, impl: str | None = None,
+                    block_d: int = _sp.DEFAULT_BLOCK_D) -> Array:
+    """P_{T_x}(g) over the last two dims; leading dims are vmapped."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.stiefel_project_ref(x, g)
+
+    interpret = impl == "pallas_interpret"
+
+    def one(xi: Array, gi: Array) -> Array:
+        d, r = xi.shape
+        # pad r to the 128-lane boundary, d to a multiple of the block size
+        pr = (-r) % 128
+        pd = (-d) % 128
+        d_p = d + pd
+        block = block_d if d_p % block_d == 0 else 128
+        xi_p = jnp.pad(xi, ((0, pd), (0, pr)))
+        gi_p = jnp.pad(gi, ((0, pd), (0, pr)))
+        out = _sp.stiefel_project_2d(xi_p, gi_p, block_d=min(block, d_p),
+                                     interpret=interpret)
+        return out[:d, :r]
+
+    if x.ndim == 2:
+        return one(x, g)
+    lead = x.shape[:-2]
+    xf = x.reshape((-1,) + x.shape[-2:])
+    gf = g.reshape((-1,) + g.shape[-2:])
+    out = jax.vmap(one)(xf, gf)
+    return out.reshape(lead + x.shape[-2:])
+
+
+# ---------------------------------------------------------------------------
+# ring mix
+# ---------------------------------------------------------------------------
+
+
+def ring_mix(x_self: Array, x_left: Array, x_right: Array, *,
+             w_self: float, w_side: float, impl: str | None = None) -> Array:
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.ring_mix_ref(x_self, x_left, x_right, w_self, w_side)
+
+    shape = x_self.shape
+    n = x_self.size
+    lane = _rm.LANE
+    pad = (-n) % lane
+
+    def flat(a):
+        af = a.reshape(-1)
+        if pad:
+            af = jnp.pad(af, (0, pad))
+        return af.reshape(-1, lane)
+
+    rows = (n + pad) // lane
+    block = rows
+    for cand in (_rm.DEFAULT_BLOCK_ROWS, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows % cand == 0:
+            block = cand
+            break
+    out = _rm.ring_mix_flat(flat(x_self), flat(x_left), flat(x_right),
+                            w_self=w_self, w_side=w_side, block_rows=block,
+                            interpret=(impl == "pallas_interpret"))
+    return out.reshape(-1)[:n].reshape(shape)

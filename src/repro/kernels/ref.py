@@ -1,0 +1,145 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for the kernel sweep tests *and* the portable
+execution path: on non-TPU backends (this CPU container, the dry-run's
+512 fake host devices) ``ops.py`` dispatches here.  ``blockwise_attention``
+is written with the same online-softmax streaming structure as the TPU
+kernel so its memory profile (never materializes S x T scores) and its
+cost_analysis FLOPs match the kernel's.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_naive(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None,
+                    q_positions: Array | None = None,
+                    kv_positions: Array | None = None,
+                    softmax_scale: float | None = None) -> Array:
+    """Reference attention, materializes full scores.  Shapes:
+    q (B, S, H, hd); k/v (B, T, Hkv, hd); returns (B, S, H, hd).
+
+    GQA: H must be a multiple of Hkv; kv heads are broadcast.
+    ``*_positions``: absolute token positions (B, S) / (B, T); default
+    aranges.  Masking: kv_pos <= q_pos (causal) and q_pos - kv_pos < window.
+    kv positions < 0 mark empty cache slots (always masked).
+    """
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    group = h // hkv
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    hdv = v.shape[-1]
+    qg = q.reshape(b, s, hkv, group, hd)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    mask = kv_positions[:, None, :] >= 0
+    if causal:
+        mask &= kv_positions[:, None, :] <= q_positions[:, :, None]
+    if window is not None:
+        mask &= (q_positions[:, :, None] - kv_positions[:, None, :]) < window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthe->bshge", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hdv).astype(q.dtype)
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int | None = None,
+                        q_positions: Array | None = None,
+                        kv_positions: Array | None = None,
+                        softmax_scale: float | None = None,
+                        chunk: int = 1024) -> Array:
+    """Online-softmax attention streaming over KV chunks (flash-style, pure
+    jnp, compiles on any backend).  Same signature/semantics as
+    :func:`attention_naive`."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    group = h // hkv
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    chunk = min(chunk, t)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, s, hkv, group, hd)
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, hkv, hdv)
+    pc = kv_positions.reshape(b, n_chunks, chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp                      # (b, chunk, hkv, hd), (b, chunk)
+        sc = jnp.einsum("bshgd,bthd->bhgst", qf, kb.astype(jnp.float32))
+        mask = pb[:, None, :] >= 0
+        if causal:
+            mask &= pb[:, None, :] <= q_positions[:, :, None]
+        if window is not None:
+            mask &= (q_positions[:, :, None] - pb[:, None, :]) < window
+        sc = jnp.where(mask[:, None, None, :, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgst,bthe->bhgse", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, s, hdv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, hdv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stiefel tangent projection
+# ---------------------------------------------------------------------------
+
+
+def stiefel_project_ref(x: Array, g: Array) -> Array:
+    """P_{T_x}(g) = g - x sym(x^T g)  over the last two dims."""
+    xtg = jnp.einsum("...dr,...ds->...rs", x, g)
+    s = 0.5 * (xtg + jnp.swapaxes(xtg, -1, -2))
+    return g - jnp.einsum("...dr,...rs->...ds", x, s)
+
+
+# ---------------------------------------------------------------------------
+# ring gossip mix
+# ---------------------------------------------------------------------------
+
+
+def ring_mix_ref(x_self: Array, x_left: Array, x_right: Array,
+                 w_self: float, w_side: float) -> Array:
+    """One gossip hop's local combine: wc*x + ws*(left + right)."""
+    return w_self * x_self + w_side * (x_left + x_right)

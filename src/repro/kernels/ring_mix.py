@@ -1,0 +1,54 @@
+"""Ring-gossip local combine Pallas kernel.
+
+After the two ``collective-permute``s of one gossip hop deliver the left and
+right neighbour tensors, each device combines
+
+    out = w_self * x + w_side * (x_left + x_right)
+
+This is a pure-bandwidth elementwise op; the kernel tiles flat (N,) data as
+(rows, 1024) VMEM panels so HBM reads stream at full width.  Trivial but it
+anchors the collective-compute overlap experiments in §Perf (the combine can
+run on the already-arrived buffer while the next permute is in flight).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANE = 1024
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _mix_kernel(xc_ref, xl_ref, xr_ref, o_ref, *, w_self: float, w_side: float):
+    o_ref[...] = (w_self * xc_ref[...].astype(jnp.float32)
+                  + w_side * (xl_ref[...].astype(jnp.float32)
+                              + xr_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w_self", "w_side", "block_rows", "interpret"))
+def ring_mix_flat(x_self: Array, x_left: Array, x_right: Array, *,
+                  w_self: float, w_side: float,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = False) -> Array:
+    """Inputs: flat 2-D (rows, LANE) panels, rows % block_rows == 0."""
+    rows, lane = x_self.shape
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0
+    kernel = functools.partial(_mix_kernel, w_self=w_self, w_side=w_side)
+    spec = pl.BlockSpec((block_rows, lane), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x_self.shape, x_self.dtype),
+        interpret=interpret,
+        name="ring_mix",
+    )(x_self, x_left, x_right)

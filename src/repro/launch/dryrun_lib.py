@@ -1,0 +1,262 @@
+"""Dry-run core: lower + compile every (arch x shape x mesh) combination
+with ShapeDtypeStruct inputs and extract memory/cost/collective artifacts.
+
+Import-safe (no device-count side effects): the CLI in ``dryrun.py`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=...`` BEFORE importing
+jax; tests use a subprocess with a smaller count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline
+from repro.launch.steps import (abstract_train_state, build_trainer,
+                                make_prefill_step, make_serve_step)
+from repro.models import transformer as T
+from repro.sharding import partition
+
+
+def _param_count(cfg: ModelConfig, dtype=jnp.bfloat16) -> int:
+    shapes = jax.eval_shape(lambda k: T.init_params(k, cfg, dtype),
+                            jax.random.PRNGKey(0))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def _active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of routed experts + shared)."""
+    total = _param_count(cfg)
+    for st in cfg.stages:
+        for b in st.blocks:
+            if b.kind == "moe_attn":
+                f = b.moe.d_expert or cfg.d_ff
+                per_expert = 3 * cfg.d_model * f
+                routed = b.moe.n_experts * per_expert
+                active = b.moe.top_k * per_expert
+                total -= st.repeat * (routed - active)
+    return total
+
+
+def _lower_one(cfg: ModelConfig, shape, mesh_kind: str, *,
+               optimizer: str = "drsgda", dtype=jnp.bfloat16):
+    """Build mesh/shardings and lower the right step for (cfg, shape)."""
+    multi_pod = mesh_kind == "multi"
+    rec: dict[str, Any] = {}
+
+    if shape.mode == "train":
+        mesh = mesh_lib.make_training_mesh(cfg.mesh_plan, multi_pod=multi_pod)
+        n_nodes = mesh_lib.total_nodes(cfg.mesh_plan, multi_pod)
+        chips = mesh.devices.size
+        with mesh:   # model code may carry PartitionSpec constraints
+            opt, _ = build_trainer(cfg, n_nodes, optimizer=optimizer,
+                                   dtype=dtype)
+            batch_specs = configs.input_specs(cfg, shape, n_nodes,
+                                              activation_dtype=dtype)
+            state_specs = abstract_train_state(cfg, opt, n_nodes, batch_specs,
+                                               dtype=dtype)
+            state_sh = partition.train_state_shardings(state_specs, mesh,
+                                                       multi_pod)
+            batch_sh = partition.train_batch_shardings(batch_specs, mesh,
+                                                       multi_pod)
+            jitted = jax.jit(opt.step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_specs, batch_specs)
+        rec["n_nodes"] = n_nodes
+        rec["tokens_per_step"] = shape.global_batch * shape.seq_len
+
+    else:
+        mesh = mesh_lib.make_serving_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        params_specs = jax.eval_shape(
+            lambda k: T.init_params(k, cfg, dtype), jax.random.PRNGKey(0))
+        params_sh = partition.serve_param_shardings(params_specs, mesh)
+        in_specs = configs.input_specs(cfg, shape, activation_dtype=dtype)
+        in_sh = partition.serve_batch_shardings(in_specs, mesh, multi_pod)
+        has_fe = cfg.frontend is not None
+        with mesh:
+            if shape.mode == "prefill":
+                step = make_prefill_step(cfg, positional_frontend=has_fe)
+                args = [params_specs, in_specs["tokens"]]
+                shs = [params_sh, in_sh["tokens"]]
+                if has_fe:
+                    args.append(in_specs["frontend_embeds"])
+                    shs.append(in_sh["frontend_embeds"])
+                lowered = jax.jit(step, in_shardings=tuple(shs)).lower(*args)
+            else:
+                step = make_serve_step(cfg, positional_frontend=has_fe)
+                args = [params_specs, in_specs["token"], in_specs["position"],
+                        in_specs["cache"]]
+                shs = [params_sh, in_sh["token"], in_sh["position"],
+                       in_sh["cache"]]
+                if has_fe:
+                    args.append(in_specs["frontend_embeds"])
+                    shs.append(in_sh["frontend_embeds"])
+                lowered = jax.jit(step, in_shardings=tuple(shs),
+                                  donate_argnums=(3,)).lower(*args)
+        rec["tokens_per_step"] = shape.global_batch * (
+            shape.seq_len if shape.mode == "prefill" else 1)
+
+    return lowered, chips, rec
+
+
+def scaled_roofline_terms(cfg: ModelConfig, shape, mesh_kind: str, *,
+                          optimizer: str = "drsgda",
+                          dtype=jnp.bfloat16) -> roofline.RooflineTerms:
+    """Differential cost analysis.
+
+    XLA's cost_analysis counts a while-loop body ONCE (not trip_count
+    times), so the scanned layer stack is under-counted.  We compile
+    shallow UNROLLED variants — all stages at repeat=1, then each
+    multi-repeat stage at repeat=2 — and extrapolate linearly:
+
+        total = cost(V0) + sum_s (R_s - 1) * (cost(V_s) - cost(V0))
+
+    Exact for uniform supercells (our stages are uniform by construction);
+    gossip/tracking costs on per-layer parameters scale with the layer
+    count and are captured by the deltas.
+    """
+    def with_repeats(reps):
+        stages = tuple(dataclasses.replace(s, repeat=r)
+                       for s, r in zip(cfg.stages, reps))
+        return dataclasses.replace(cfg, stages=stages, use_scan=False)
+
+    def terms_for(c):
+        lowered, chips, _ = _lower_one(c, shape, mesh_kind,
+                                       optimizer=optimizer, dtype=dtype)
+        return roofline.derive(lowered.compile(), chips)
+
+    base_reps = [1] * len(cfg.stages)
+    t0 = terms_for(with_repeats(base_reps))
+    flops, byts = t0.flops_per_dev, t0.bytes_per_dev
+    breakdown = dict(t0.collective_breakdown)
+    for s_idx, st in enumerate(cfg.stages):
+        if st.repeat <= 1:
+            continue
+        reps = list(base_reps)
+        reps[s_idx] = 2
+        ts = terms_for(with_repeats(reps))
+        mult = st.repeat - 1
+        flops += mult * max(ts.flops_per_dev - t0.flops_per_dev, 0.0)
+        byts += mult * max(ts.bytes_per_dev - t0.bytes_per_dev, 0.0)
+        for k in breakdown:
+            breakdown[k] += mult * max(
+                ts.collective_breakdown.get(k, 0) - t0.collective_breakdown.get(k, 0), 0)
+    return roofline.RooflineTerms(
+        flops_per_dev=flops, bytes_per_dev=byts,
+        collective_bytes_per_dev=float(sum(breakdown.values())),
+        collective_breakdown=breakdown, chips=t0.chips)
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            optimizer: str = "drsgda", dtype=jnp.bfloat16,
+            scale_analysis: bool = True) -> dict:
+    """Lower + compile one combination; returns the result record."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = configs.get_config(arch)
+    variant = ""
+    if shape_name == "long_500k" and configs.needs_long_context_override(cfg):
+        cfg = configs.long_context_override(cfg)
+        variant = "swa-override"
+
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "mode": shape.mode, "optimizer": optimizer,
+    }
+    t0 = time.time()
+    lowered, chips, extra = _lower_one(cfg, shape, mesh_kind,
+                                       optimizer=optimizer, dtype=dtype)
+    rec.update(extra)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    rec["chips"] = chips
+
+    # ---- artifacts ---------------------------------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = _memory_dict(ma)
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis"] = {"error": str(e)}
+
+    raw_terms = roofline.derive(compiled, chips)
+    rec["roofline_raw"] = raw_terms.as_dict()
+    if scale_analysis and any(st.repeat > 1 for st in cfg.stages):
+        terms = scaled_roofline_terms(cfg, shape, mesh_kind,
+                                      optimizer=optimizer, dtype=dtype)
+    else:
+        terms = raw_terms
+    rec["roofline"] = terms.as_dict()
+
+    n_params = _param_count(cfg, dtype)
+    n_active = _active_param_count(cfg)
+    rec["n_params"] = n_params
+    rec["n_params_active"] = n_active
+    if shape.mode == "train":
+        mf = roofline.model_flops(n_active, rec["tokens_per_step"])
+    else:
+        mf = 2.0 * n_active * rec["tokens_per_step"]
+    rec["model_flops"] = mf
+    hlo_global = terms.flops_per_dev * chips
+    rec["useful_fraction"] = roofline.useful_fraction(mf, hlo_global)
+    return rec
+
+
+def _memory_dict(ma) -> dict:
+    if ma is None:
+        return {"unavailable": True}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        if hasattr(ma, attr):
+            try:
+                out[attr] = int(getattr(ma, attr))
+            except Exception:
+                pass
+    if not out:
+        out["repr"] = str(ma)[:2000]
+    return out
+
+
+def rescale_record(path: str, *, dtype=jnp.bfloat16) -> dict:
+    """Patch an existing dry-run record with the differential (scaled)
+    roofline — keeps the original full-compile proof/memory stats, demotes
+    the unscaled terms to ``roofline_raw``."""
+    with open(path) as f:
+        rec = json.load(f)
+    shape = INPUT_SHAPES[rec["shape"]]
+    cfg = configs.get_config(rec["arch"])
+    if rec.get("variant") == "swa-override":
+        cfg = configs.long_context_override(cfg)
+    if "roofline_raw" not in rec:
+        rec["roofline_raw"] = rec["roofline"]
+    terms = scaled_roofline_terms(cfg, shape, rec["mesh"],
+                                  optimizer=rec.get("optimizer", "drsgda"),
+                                  dtype=dtype)
+    rec["roofline"] = terms.as_dict()
+    rec["useful_fraction"] = roofline.useful_fraction(
+        rec["model_flops"], terms.flops_per_dev * rec["chips"])
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def save_record(rec: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path

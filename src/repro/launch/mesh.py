@@ -1,0 +1,59 @@
+"""Mesh construction.
+
+``make_production_mesh`` is the canonical grid required by the dry-run spec:
+(16, 16) ("data", "model") per pod, (2, 16, 16) ("pod", "data", "model") for
+two pods.  ``make_training_mesh`` refines the same 256-chip-per-pod grid
+into the 4-axis logical mesh the decentralized optimizer uses
+("pod", "node", "fsdp", "model") — node x fsdp x model == 256, factorization
+chosen per architecture (MeshPlan).  All constructors are FUNCTIONS so that
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import MeshPlan
+
+CHIPS_PER_POD = 256
+PODS = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (PODS, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_training_mesh(plan: MeshPlan, *, multi_pod: bool = False,
+                       devices=None) -> Mesh:
+    """Refine the production grid into ("pod","node","fsdp","model").
+
+    Uses the same device ordering as make_production_mesh (row-major over
+    the per-pod 256-chip grid) so the physical ICI neighbourhoods match.
+    """
+    n_pods = PODS if multi_pod else 1
+    if devices is None:
+        devices = np.asarray(jax.devices()[: n_pods * CHIPS_PER_POD])
+    else:
+        devices = np.asarray(devices)
+    grid = devices.reshape(n_pods, plan.node, plan.fsdp, plan.model)
+    if multi_pod:
+        return Mesh(grid, ("pod", "node", "fsdp", "model"))
+    return Mesh(grid[0], ("node", "fsdp", "model"))
+
+
+def make_serving_mesh(*, multi_pod: bool = False) -> Mesh:
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def make_host_mesh(node: int = 1, fsdp: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many (host) devices exist — used by tests."""
+    n = node * fsdp * model
+    devices = np.asarray(jax.devices()[:n]).reshape(node, fsdp, model)
+    return Mesh(devices, ("node", "fsdp", "model"))
+
+
+def total_nodes(plan: MeshPlan, multi_pod: bool) -> int:
+    return plan.node * (PODS if multi_pod else 1)

@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver.
+
+Each experiment = (base arch × shape × mesh) + a list of named config
+transformations (knobs).  For every variant we derive the scaled roofline
+terms (differential analysis) and the top collective ops, and append the
+record to experiments/perf/<name>.json.  The narrative
+hypothesis → change → before → after lives in EXPERIMENTS.md §Perf.
+
+Run:  PYTHONPATH=src python -m repro.launch.perf --exp deepseek_moe
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax.numpy as jnp                       # noqa: E402
+
+from repro import configs                     # noqa: E402
+from repro.configs.base import INPUT_SHAPES, MeshPlan, MoESpec  # noqa: E402
+from repro.launch import dryrun_lib, roofline  # noqa: E402
+
+
+def analyze(cfg, shape_name: str, mesh_kind: str = "single", *,
+            optimizer: str = "drsgda", top_n: int = 10) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    t0 = time.time()
+    terms = dryrun_lib.scaled_roofline_terms(cfg, shape, mesh_kind,
+                                             optimizer=optimizer)
+    # top collectives from the depth-1 unrolled variant (source attribution)
+    v0 = dataclasses.replace(
+        cfg, stages=tuple(dataclasses.replace(s, repeat=1)
+                          for s in cfg.stages), use_scan=False)
+    lowered, chips, _ = dryrun_lib._lower_one(v0, shape, mesh_kind,
+                                              optimizer=optimizer)
+    top = roofline.top_collectives(lowered.compile().as_text(), top_n)
+    return {"terms": terms.as_dict(), "top_collectives": top,
+            "wall_s": round(time.time() - t0, 1)}
+
+
+# ---------------------------------------------------------------------------
+# knob transformations
+# ---------------------------------------------------------------------------
+
+
+def moe_dispatch_groups(g: int, spmd_axis: str = "", expert_axis: str = ""):
+    def tf(cfg):
+        stages = tuple(
+            dataclasses.replace(st, blocks=tuple(
+                dataclasses.replace(b, moe=dataclasses.replace(
+                    b.moe, dispatch_groups=g, dispatch_spmd_axis=spmd_axis,
+                    expert_shard_axis=expert_axis))
+                if b.kind == "moe_attn" else b
+                for b in st.blocks))
+            for st in cfg.stages)
+        return dataclasses.replace(cfg, stages=stages)
+    return tf
+
+
+def ce_dot(cfg):
+    return dataclasses.replace(cfg, ce_impl="dot")
+
+
+def mesh_plan(node: int, fsdp: int, model: int):
+    def tf(cfg):
+        return dataclasses.replace(cfg,
+                                   mesh_plan=MeshPlan(node, fsdp, model))
+    return tf
+
+
+def no_remat(cfg):
+    return dataclasses.replace(cfg, remat=False)
+
+
+def vocab_pad(m: int = 256):
+    def tf(cfg):
+        return dataclasses.replace(cfg, vocab_pad_to=m)
+    return tf
+
+
+def compose(*tfs):
+    def tf(cfg):
+        for t in tfs:
+            cfg = t(cfg)
+        return cfg
+    return tf
+
+
+# ---------------------------------------------------------------------------
+# experiments — three selected pairs (§Perf)
+# ---------------------------------------------------------------------------
+
+EXPERIMENTS = {
+    # pair 1: most collective-bound — deepseek train
+    "deepseek_moe": {
+        "arch": "deepseek-v2-236b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            ("baseline", lambda c: c),
+            ("local_dispatch_g8", moe_dispatch_groups(8)),
+            ("seq_dispatch", moe_dispatch_groups(-1)),
+            ("seq_spmd_fsdp", moe_dispatch_groups(-1, "fsdp")),
+            ("expert_pin", moe_dispatch_groups(1, "", "model")),
+            ("expert_pin+seq_spmd", moe_dispatch_groups(-1, "fsdp", "model")),
+        ],
+    },
+    # pair 2: paper-technique-representative — granite pure-DP decentralized
+    "granite_gossip": {
+        "arch": "granite-3-2b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            ("baseline", lambda c: c),
+            ("ce_dot", ce_dot),
+            ("ce_dot+fsdp4", compose(ce_dot, mesh_plan(4, 4, 16))),
+            ("ce_dot+tp4", compose(ce_dot, mesh_plan(16, 4, 4))),
+            ("ce_dot+tp4+vpad", compose(ce_dot, mesh_plan(16, 4, 4),
+                                        vocab_pad(256))),
+            ("vpad_only", vocab_pad(256)),
+        ],
+    },
+    # pair 3: worst compute fraction — gemma3 train
+    "gemma3_train": {
+        "arch": "gemma3-27b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            ("baseline", lambda c: c),
+            ("ce_dot", ce_dot),
+            ("ce_dot+tp8_fsdp8", compose(ce_dot, mesh_plan(4, 8, 8))),
+            ("ce_dot+node8", compose(ce_dot, mesh_plan(8, 4, 8))),
+        ],
+    },
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", required=True, choices=list(EXPERIMENTS) + ["all"])
+    ap.add_argument("--variant", default="all")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args(argv)
+
+    names = list(EXPERIMENTS) if args.exp == "all" else [args.exp]
+    os.makedirs(args.out, exist_ok=True)
+    for name in names:
+        spec = EXPERIMENTS[name]
+        path = os.path.join(args.out, f"{name}.json")
+        results = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                results = json.load(f)
+        for vname, tf in spec["variants"]:
+            if args.variant != "all" and vname != args.variant:
+                continue
+            if vname in results:
+                print(f"[skip] {name}/{vname} (cached)", flush=True)
+                continue
+            cfg = tf(configs.get_config(spec["arch"]))
+            try:
+                rec = analyze(cfg, spec["shape"], spec["mesh"])
+                results[vname] = rec
+                t = rec["terms"]
+                print(f"[ok] {name}/{vname}: compute={t['compute_s']:.3e} "
+                      f"memory={t['memory_s']:.3e} "
+                      f"collective={t['collective_s']:.3e} "
+                      f"dominant={t['dominant']} ({rec['wall_s']}s)",
+                      flush=True)
+            except Exception as e:
+                print(f"[FAIL] {name}/{vname}: {type(e).__name__}: {e}",
+                      flush=True)
+            with open(path, "w") as f:
+                json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

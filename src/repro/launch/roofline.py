@@ -1,0 +1,170 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), v5e constants:
+
+  compute_s    = FLOPs_per_device / 197e12        (bf16 MXU peak)
+  memory_s     = bytes_per_device / 819e9         (HBM bandwidth)
+  collective_s = collective_bytes_per_device / 50e9  (ICI, ~50 GB/s/link)
+
+FLOPs / bytes come from ``compiled.cost_analysis()`` of the SPMD-partitioned
+per-device module.  Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO and sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (counting the
+per-device payload each op moves over the interconnect once — a deliberate
+first-order model; ring reductions move ~2x, which we note rather than
+model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[2,128,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_part, dtype, dims, kind = m.groups()
+        if tuple_part is not None:
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tuple_part))
+        else:
+            b = _shape_bytes(dtype, dims)
+        out[kind] += b
+    return out
+
+
+_OP_LINE_RE = re.compile(
+    r"^\s*%?\S+\s*=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\((.*)$", re.M)
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def top_collectives(hlo_text: str, n: int = 12) -> list[dict]:
+    """The n largest collective ops with their result bytes and the source
+    op_name metadata — the 'profile' a dry-run gives you for §Perf."""
+    rows = []
+    for m in _OP_LINE_RE.finditer(hlo_text):
+        tuple_part, dtype, dims, kind, rest = m.groups()
+        if tuple_part is not None:
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tuple_part))
+            shape = tuple_part[:60]
+        else:
+            b = _shape_bytes(dtype, dims)
+            shape = f"{dtype}[{dims}]"
+        meta = _META_RE.search(rest)
+        rows.append({"kind": kind, "shape": shape, "bytes": b,
+                     "op_name": (meta.group(1)[-120:] if meta else "")})
+    rows.sort(key=lambda r: -r["bytes"])
+    # merge duplicates (same kind+shape+op_name) with a count
+    merged: dict = {}
+    for r in rows:
+        key = (r["kind"], r["shape"], r["op_name"])
+        if key in merged:
+            merged[key]["count"] += 1
+            merged[key]["total_bytes"] += r["bytes"]
+        else:
+            merged[key] = {**r, "count": 1, "total_bytes": r["bytes"]}
+    out = sorted(merged.values(), key=lambda r: -r["total_bytes"])
+    return out[:n]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_dev: float
+    bytes_per_dev: float
+    collective_bytes_per_dev: float
+    collective_breakdown: dict
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "collective_bytes_per_dev": self.collective_bytes_per_dev,
+            "collective_breakdown": self.collective_breakdown,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def derive(compiled, chips: int) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):             # some backends return [dict]
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    cb = collective_bytes(text)
+    return RooflineTerms(
+        flops_per_dev=flops,
+        bytes_per_dev=byts,
+        collective_bytes_per_dev=float(sum(cb.values())),
+        collective_breakdown=cb,
+        chips=chips,
+    )
+
+
+def model_flops(n_params_active: int, tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N_active * D (training); 2 * N * D for inference."""
+    return 6.0 * n_params_active * tokens
+
+
+def useful_fraction(model_fl: float, hlo_flops_global: float) -> Optional[float]:
+    if hlo_flops_global <= 0:
+        return None
+    return model_fl / hlo_flops_global

@@ -1,0 +1,90 @@
+"""Serving driver: batched autoregressive decode of a (consensus) model.
+
+On this CPU container it runs reduced configs for real (examples/
+serve_decode.py); on a TPU slice the same step functions are jitted against
+the production mesh (see dryrun.py for the lowering path).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import transformer as T
+
+
+def generate(cfg, params, prompt_tokens, n_new: int, *,
+             frontend_embeds=None, temperature: float = 0.0, seed: int = 0):
+    """Greedy/temperature sampling loop: prefill then n_new decode steps."""
+    b, s = prompt_tokens.shape[:2]
+    cache_len = s + n_new
+    logits, _, caches = T.forward(params, cfg, prompt_tokens,
+                                  frontend_embeds=frontend_embeds,
+                                  mode="prefill", cache_len=cache_len,
+                                  last_logits_only=True)
+    serve_step = jax.jit(make_serve_step(cfg))
+    key = jax.random.PRNGKey(seed)
+
+    def sample(lg, key):
+        if temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1)
+        return jax.random.categorical(key, lg / temperature, axis=-1)
+
+    tok = sample(logits[:, -1], key)
+    out = [tok]
+    for i in range(n_new - 1):
+        key, sub = jax.random.split(key)
+        pos = jnp.full((b,), s + i, jnp.int32)
+        if frontend_embeds is not None:
+            lg, caches = serve_step(params, tok, pos, caches,
+                                    frontend_embeds=frontend_embeds)
+        else:
+            lg, caches = serve_step(params, tok, pos, caches)
+        tok = sample(lg, sub)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(key, cfg)
+    shape = (args.batch, args.prompt_len) if cfg.n_codebooks == 1 else \
+        (args.batch, args.prompt_len, cfg.n_codebooks)
+    prompt = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    fe = None
+    if cfg.frontend is not None:
+        fe = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+
+    t0 = time.time()
+    toks = generate(cfg, params, prompt, args.new_tokens,
+                    frontend_embeds=fe, temperature=args.temperature,
+                    seed=args.seed)
+    dt = time.time() - t0
+    print(json.dumps({
+        "arch": cfg.name, "batch": args.batch, "new_tokens": args.new_tokens,
+        "wall_s": round(dt, 2),
+        "tok_per_s": round(args.batch * args.new_tokens / dt, 1),
+        "sample": toks[0].tolist()[:8],
+    }))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

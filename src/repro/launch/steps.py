@@ -1,0 +1,105 @@
+"""Step builders: decentralized minimax train_step and serving steps.
+
+``build_trainer`` wires a ModelConfig into the paper's optimizer stack:
+LM group-DRO minimax problem (objectives/lm.py) + GossipSpec + DRGDA/DRSGDA
+(or a baseline).  ``make_serve_step`` / ``make_prefill_step`` are the
+consensus-model inference entry points lowered by the decode/prefill input
+shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import OPTIMIZERS
+from repro.core.gda import GDAHyper, broadcast_to_nodes
+from repro.core.gossip import GossipSpec
+from repro.models import transformer as T
+from repro.objectives import lm as lm_obj
+
+PyTree = Any
+
+
+def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
+                  hyper: Optional[GDAHyper] = None, topology: str = "ring",
+                  dtype=jnp.float32):
+    """Returns (opt, problem).  Default hyper uses k=1 gossip per step (the
+    paper's experimental regime); pass k_override=None-in-spec via
+    GossipSpec(k_steps=None) + hyper k_override to use the Theorem-1 k."""
+    template = jax.eval_shape(
+        lambda k: T.init_params(k, cfg, dtype), jax.random.PRNGKey(0))
+    problem = lm_obj.make_lm_problem(cfg, template)
+    gossip = GossipSpec(topology=topology, n_nodes=n_nodes, k_steps=1)
+    hyper = hyper or GDAHyper(alpha=0.5, beta=0.02, eta=0.05)
+    opt = OPTIMIZERS[optimizer](problem, gossip, hyper)
+    return opt, problem
+
+
+def init_train_state(key, cfg: ModelConfig, opt, n_nodes: int, batch0,
+                     dtype=jnp.float32):
+    """Real initialization (smoke tests / the end-to-end driver)."""
+    from repro.sharding.partition import project_params_to_manifold
+
+    params = T.init_params(key, cfg, dtype)
+    params = project_params_to_manifold(params, opt.problem.stiefel_mask)
+    x0 = broadcast_to_nodes(params, n_nodes)
+    y0 = lm_obj.init_y(cfg, n_nodes)
+    return opt.init(x0, y0, batch0)
+
+
+def abstract_train_state(cfg: ModelConfig, opt, n_nodes: int, batch_specs,
+                         dtype=jnp.float32):
+    """ShapeDtypeStruct state for the dry-run (no allocation)."""
+    def build():
+        params = T.init_params(jax.random.PRNGKey(0), cfg, dtype)
+        x0 = broadcast_to_nodes(params, n_nodes)
+        y0 = lm_obj.init_y(cfg, n_nodes)
+        return opt.init(x0, y0, batch_specs)
+    return jax.eval_shape(build)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step(cfg: ModelConfig, positional_frontend: bool = False):
+    """One-token decode against per-layer caches (the ``decode_*`` shapes).
+
+    ``positional_frontend=True`` exposes frontend embeddings as a 5th
+    positional argument (pjit + in_shardings does not accept kwargs).
+    """
+    if positional_frontend:
+        def serve_step_fe(params, token, position, cache, frontend_embeds):
+            return T.decode_step(params, cfg, token, position, cache,
+                                 frontend_embeds=frontend_embeds)
+        return serve_step_fe
+
+    def serve_step(params, token, position, cache, frontend_embeds=None):
+        logits, new_cache = T.decode_step(params, cfg, token, position, cache,
+                                          frontend_embeds=frontend_embeds)
+        return logits, new_cache
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, positional_frontend: bool = False):
+    """Full-sequence prefill: final-position logits + populated caches."""
+    if positional_frontend:
+        def prefill_step_fe(params, tokens, frontend_embeds):
+            logits, _, caches = T.forward(params, cfg, tokens,
+                                          frontend_embeds=frontend_embeds,
+                                          mode="prefill",
+                                          last_logits_only=True)
+            return logits[:, -1], caches
+        return prefill_step_fe
+
+    def prefill_step(params, tokens, frontend_embeds=None):
+        logits, _, caches = T.forward(params, cfg, tokens,
+                                      frontend_embeds=frontend_embeds,
+                                      mode="prefill", last_logits_only=True)
+        return logits[:, -1], caches
+    return prefill_step

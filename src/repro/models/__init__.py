@@ -1,0 +1,5 @@
+"""Model zoo: composable block programs (dense/GQA, MLA, MoE, SWA, Mamba2,
+mLSTM/sLSTM, VLM cross-attention, multi-codebook audio)."""
+from repro.models import attention, layers, moe, ssm, transformer, xlstm  # noqa: F401
+from repro.models.transformer import (decode_step, forward, init_cache,  # noqa: F401
+                                      init_params)

@@ -1,0 +1,108 @@
+"""Shared neural building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None,
+               dtype=jnp.float32) -> Array:
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    return (scale * jax.random.normal(key, (d_in, d_out))).astype(dtype)
+
+
+def orthogonal_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> Array:
+    """Orthonormal-column init — Stiefel-feasible starting point for
+    manifold-constrained weights (the paper initializes on St(d, r))."""
+    tall = d_in >= d_out
+    a = jax.random.normal(key, (d_in, d_out) if tall else (d_out, d_in))
+    q, _ = jnp.linalg.qr(a)
+    return (q if tall else q.T).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-5) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype) * params["scale"]
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype=dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype=dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu(params, x: Array) -> Array:
+    g = jax.nn.silu(x @ params["w_gate"])
+    return (g * (x @ params["w_up"])) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]                                 # (..., S, 1, hd/2)
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (mamba / mLSTM front conv)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d_init(key, channels: int, width: int, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (width, channels)) * (1.0 / width) ** 0.5
+                  ).astype(dtype)}
+
+
+def causal_conv1d(params, x: Array, state: Array | None = None):
+    """x: (B, S, C) depthwise causal conv.  If ``state`` (B, W-1, C) is given,
+    runs in streaming mode and returns (y, new_state)."""
+    w = params["w"]                        # (W, C)
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((*x.shape[:-2], width - 1, x.shape[-1]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=-2)
+        y = sum(xp[..., i:i + x.shape[-2], :] * w[i] for i in range(width))
+        return jax.nn.silu(y)
+    xp = jnp.concatenate([state, x], axis=-2)        # (B, W-1+S, C)
+    y = sum(xp[..., i:i + x.shape[-2], :] * w[i] for i in range(width))
+    new_state = xp[..., -(width - 1):, :]
+    return jax.nn.silu(y), new_state

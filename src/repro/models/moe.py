@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN (top-k routing, capacity-bounded, sort-based
+dispatch) + shared experts (DeepSeek-V2 style).
+
+Dispatch is the production-style gather/scatter formulation (token sort by
+expert, capacity truncation) rather than the (T, E, C) one-hot einsum — the
+latter costs O(T·E·C·d) matmul FLOPs and would dominate the roofline with
+fake compute.  Expert weights are stacked on a leading E axis, sharded over
+the ``model`` mesh axis (expert parallelism); the gather/scatter at the
+boundary is where XLA inserts the all-to-all-class collectives that §Perf
+iterates on.
+
+Router is always Euclidean (not Stiefel-constrained) — see DESIGN.md
+§Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoESpec
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, spec: MoESpec, dtype=jnp.float32):
+    d = cfg.d_model
+    f = spec.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    e = spec.n_experts
+    p = {
+        "router": dense_init(ks[0], d, e, scale=0.02, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * (1.0 / d) ** 0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * (1.0 / d) ** 0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * (1.0 / f) ** 0.5).astype(dtype),
+    }
+    if spec.n_shared:
+        fs = f * spec.n_shared
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, d, fs, dtype=dtype),
+            "w_up": dense_init(k2, d, fs, dtype=dtype),
+            "w_down": dense_init(k3, fs, d, dtype=dtype),
+        }
+    return p
+
+
+def apply_moe(params, x: Array, spec: MoESpec) -> tuple[Array, Array]:
+    """x: (B, S, d) -> (y, aux_loss).  Capacity-bounded top-k routing.
+
+    With ``spec.dispatch_groups == G > 1`` the token stream is split into G
+    contiguous groups dispatched independently (vmapped): routing stays
+    identical per token, capacity becomes per-group, and — when G matches
+    the fsdp shard count — the sort/gather/scatter machinery never crosses
+    shard boundaries, so GSPMD emits no full-token all-gather.
+    """
+    b, s, d = x.shape
+    t = b * s
+    g = spec.dispatch_groups
+    if g == -1:
+        g = b          # per-sequence dispatch: groups == the batch dim, so
+        #                the vmapped axis carries the batch's existing fsdp
+        #                sharding and every gather/scatter is shard-local
+    if g > 1 and t % g == 0:
+        xg = x.reshape(g, t // g, d)
+        vmap_kw = {}
+        if spec.dispatch_spmd_axis:
+            vmap_kw["spmd_axis_name"] = spec.dispatch_spmd_axis
+        yg, auxg = jax.vmap(lambda xx: _dispatch_one(params, xx, spec),
+                            **vmap_kw)(xg)
+        y = yg.reshape(b, s, d)
+        return y.astype(x.dtype), jnp.mean(auxg)
+    y, aux = _dispatch_one(params, x.reshape(t, d), spec)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _dispatch_one(params, xf: Array, spec: MoESpec) -> tuple[Array, Array]:
+    """Sort-based capacity dispatch of a flat (T, d) token group."""
+    t, d = xf.shape
+    e, k = spec.n_experts, spec.top_k
+
+    logits = xf.astype(jnp.float32) @ params["router"]            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                   # renormalize
+
+    # -- load-balance auxiliary loss (Switch-style) -------------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(1), axis=0)
+    mean_probs = probs.mean(axis=0)
+    aux = e * jnp.sum(frac_tokens * mean_probs) * spec.router_aux_coef
+
+    # -- sort-based capacity dispatch ---------------------------------------
+    cap = int(max(k, round(t * k / e * spec.capacity_factor)))
+    flat_expert = expert_idx.reshape(-1)                          # (T*K,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    se, sg, st_ = flat_expert[order], flat_gate[order], flat_token[order]
+    # position of each entry within its expert group
+    ones = jnp.ones_like(se)
+    cum = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(se, jnp.arange(e), side="left")  # (E,)
+    pos_in_e = cum - seg_start[se]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)          # overflow slot
+
+    # token index per (expert, capacity) slot; e*cap is a dropped-token bin
+    token_buf = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(
+        st_.astype(jnp.int32), mode="drop")
+    gate_buf = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sg, 0.0), mode="drop")
+    token_buf = token_buf[: e * cap].reshape(e, cap)
+    gate_buf = gate_buf[: e * cap].reshape(e, cap)
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xe = xpad[token_buf]                                          # (E, C, d)
+
+    if spec.expert_shard_axis:
+        # pin the expert-parallel layout: E over the model axis.  Without
+        # this GSPMD replicates xe/h in f32 across every device (§Perf).
+        from jax.sharding import PartitionSpec as _P
+        _pin = lambda a: jax.lax.with_sharding_constraint(
+            a, _P(spec.expert_shard_axis, None, None))
+        xe = _pin(xe)
+    else:
+        _pin = lambda a: a
+
+    h = _pin(jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]))
+             * jnp.einsum("ecd,edf->ecf", xe, params["w_up"]))
+    ye = _pin(jnp.einsum("ecf,efd->ecd", h, params["w_down"]))    # (E, C, d)
+    ye = ye * gate_buf[..., None].astype(ye.dtype)
+
+    y = jnp.zeros((t + 1, d), ye.dtype).at[token_buf.reshape(-1)].add(
+        ye.reshape(-1, d))[:t]
+
+    if "shared" in params:
+        sh = params["shared"]
+        hs = jax.nn.silu(xf @ sh["w_gate"]) * (xf @ sh["w_up"])
+        y = y + hs @ sh["w_down"]
+
+    return y, aux

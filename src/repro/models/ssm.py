@@ -1,0 +1,213 @@
+"""Mamba2 (SSD) block: chunked selective-state-space computation.
+
+Recurrence (per head h, state (N, P)):   H_t = a_t H_{t-1} + B_t (dt_t x_t)^T
+Output:                                  y_t = C_t · H_t + D x_t
+
+Training uses the chunked SSD algorithm (Dao & Gu, 2024): quadratic
+attention-like form inside chunks of length L, a sequential ``lax.scan``
+carry across the S/L chunks.  Decode is the O(1) single-step recurrence on a
+cached state.  All tensors stay (B, S, H, ·) — no (B, S, H, N, P) per-token
+states are ever materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMSpec
+from repro.models.layers import causal_conv1d, causal_conv1d_init, dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig, spec: SSMSpec):
+    d_inner = spec.expand * cfg.d_model
+    n_heads = d_inner // spec.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba(key, cfg: ModelConfig, spec: SSMSpec, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, h = _dims(cfg, spec)
+    g, n = spec.n_groups, spec.d_state
+    conv_dim = d_inner + 2 * g * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * g * n + h, dtype=dtype),
+        "conv": causal_conv1d_init(ks[1], conv_dim, spec.d_conv, dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype=dtype),
+    }
+
+
+def _split_proj(params, u: Array, cfg: ModelConfig, spec: SSMSpec):
+    d_inner, h = _dims(cfg, spec)
+    g, n = spec.n_groups, spec.d_state
+    zxbcdt = u @ params["in_proj"]
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _gates(params, xbc_conv: Array, dt_raw: Array, cfg, spec):
+    d_inner, h = _dims(cfg, spec)
+    g, n = spec.n_groups, spec.d_state
+    p = spec.head_dim
+    x, bc = jnp.split(xbc_conv, [d_inner], axis=-1)
+    b_, c_ = jnp.split(bc, 2, axis=-1)
+    bsz = x.shape[:-1]
+    x = x.reshape(*bsz, h, p)
+    b_ = b_.reshape(*bsz, g, n)
+    c_ = c_.reshape(*bsz, g, n)
+    rep = h // g
+    b_ = jnp.repeat(b_, rep, axis=-2)                        # (.., H, N)
+    c_ = jnp.repeat(c_, rep, axis=-2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(params["a_log"])                             # (H,) > 0
+    la = -dt * a                                             # log decay <= 0
+    return x, b_, c_, dt, la
+
+
+def mamba_prefill(params, u: Array, cfg: ModelConfig, spec: SSMSpec, *,
+                  make_cache: bool = False):
+    """u: (B, S, d_model) -> (y, cache | None)."""
+    bsz, s, _ = u.shape
+    d_inner, h = _dims(cfg, spec)
+    p, n = spec.head_dim, spec.d_state
+    z, xbc, dt_raw = _split_proj(params, u, cfg, spec)
+    if make_cache:
+        xbc_conv, conv_state = causal_conv1d(params["conv"], xbc,
+                                             _zero_conv_state(params, bsz, xbc.dtype))
+    else:
+        xbc_conv = causal_conv1d(params["conv"], xbc)
+        conv_state = None
+    x, b_, c_, dt, la = _gates(params, xbc_conv, dt_raw, cfg, spec)
+
+    y, final_state = _ssd_chunked(x, b_, c_, dt, la, spec.chunk)
+    y = y + x.astype(jnp.float32) * params["d_skip"][:, None]   # D skip (H,1)
+    y = y.reshape(bsz, s, d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"]
+    cache = None
+    if make_cache:
+        cache = {"ssm": final_state, "conv": conv_state}
+    return out, cache
+
+
+def mamba_decode(params, u: Array, cfg: ModelConfig, spec: SSMSpec, cache: dict):
+    """u: (B, 1, d_model); cache: {'ssm': (B,H,N,P) f32, 'conv': (B,W-1,C)}."""
+    bsz = u.shape[0]
+    d_inner, h = _dims(cfg, spec)
+    z, xbc, dt_raw = _split_proj(params, u, cfg, spec)
+    xbc_conv, conv_state = causal_conv1d(params["conv"], xbc, cache["conv"])
+    x, b_, c_, dt, la = _gates(params, xbc_conv, dt_raw, cfg, spec)
+    # single step: squeeze S=1
+    x1 = x[:, 0].astype(jnp.float32)            # (B,H,P)
+    b1 = b_[:, 0].astype(jnp.float32)           # (B,H,N)
+    c1 = c_[:, 0].astype(jnp.float32)
+    dt1 = dt[:, 0]                              # (B,H)
+    a1 = jnp.exp(la[:, 0])                      # (B,H)
+    hst = cache["ssm"] * a1[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", b1, x1 * dt1[..., None])
+    y1 = jnp.einsum("bhn,bhnp->bhp", c1, hst) + x1 * params["d_skip"][:, None]
+    y = y1.reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"], {"ssm": hst, "conv": conv_state}
+
+
+def _zero_conv_state(params, bsz: int, dtype):
+    w = params["conv"]["w"]
+    return jnp.zeros((bsz, w.shape[0] - 1, w.shape[1]), dtype)
+
+
+def init_mamba_cache(params, cfg: ModelConfig, spec: SSMSpec, bsz: int, dtype):
+    d_inner, h = _dims(cfg, spec)
+    return {
+        "ssm": jnp.zeros((bsz, h, spec.d_state, spec.head_dim), jnp.float32),
+        "conv": _zero_conv_state(params, bsz, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def _ssd_chunked(x: Array, b_: Array, c_: Array, dt: Array, la: Array,
+                 chunk: int):
+    """x: (B,S,H,P); b_/c_: (B,S,H,N); dt/la: (B,S,H).
+
+    Returns y (B,S,H,P) float32 and final state (B,H,N,P) float32.
+    """
+    bsz, s0, h, p = x.shape
+    n = b_.shape[-1]
+    l = min(chunk, s0)
+    pad = (-s0) % l
+    if pad:
+        # zero x/B/C contributions, zero log-decay (a=1) => state preserved
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, b_, c_, dt, la = zp(x), zp(b_), zp(c_), zp(dt), zp(la)
+    s = s0 + pad
+    nc = s // l
+
+    xb = (x.astype(jnp.float32) * dt[..., None]).reshape(bsz, nc, l, h, p)
+    bb = b_.astype(jnp.float32).reshape(bsz, nc, l, h, n)
+    cb = c_.astype(jnp.float32).reshape(bsz, nc, l, h, n)
+    lab = la.reshape(bsz, nc, l, h)
+
+    cum = jnp.cumsum(lab, axis=2)                    # within-chunk cumulative
+    total = cum[:, :, -1, :]                         # (B,NC,H)
+
+    # intra-chunk quadratic form: w_ij = exp(cum_i - cum_j) for i >= j.
+    # Mask INSIDE the exp: masked (i < j) entries have diff > 0 and would
+    # overflow to inf, poisoning the backward pass through where().
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,NC,L,L,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    w = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bclhn,bcmhn->bclmh", cb, bb) * w
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", scores, xb)
+
+    # chunk summary states: S_c = sum_j exp(total - cum_j) B_j x_j^T
+    decay_tail = jnp.exp(total[:, :, None, :] - cum)          # (B,NC,L,H)
+    st = jnp.einsum("bclh,bclhn,bclhp->bchnp", decay_tail, bb, xb)
+
+    # sequential scan over chunks
+    def scan_fn(hprev, inp):
+        st_c, tot_c = inp                                     # (B,H,N,P), (B,H)
+        hnew = hprev * jnp.exp(tot_c)[..., None, None] + st_c
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    hfinal, hprevs = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(st, 1, 0), jnp.moveaxis(total, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                       # (B,NC,H,N,P)
+
+    # inter-chunk contribution: y_i += exp(cum_i) C_i · H_{c-1}
+    y_inter = jnp.einsum("bclh,bclhn,bchnp->bclhp",
+                         jnp.exp(cum), cb, hprevs)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, :s0]
+    return y, hfinal
+
+
+def ssd_reference(x, b_, c_, dt, la):
+    """O(S) sequential oracle for tests: plain recurrence."""
+    bsz, s, h, p = x.shape
+    n = b_.shape[-1]
+    xb = x.astype(jnp.float32) * dt[..., None]
+
+    def step(hprev, inp):
+        xt, bt, ct, lat = inp
+        hnew = hprev * jnp.exp(lat)[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt, xt)
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, hnew)
+        return hnew, yt
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    hfinal, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(xb, 1, 0), jnp.moveaxis(b_.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(c_.astype(jnp.float32), 1, 0), jnp.moveaxis(la, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hfinal

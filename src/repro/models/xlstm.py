@@ -1,0 +1,312 @@
+"""xLSTM cells: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential), following Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM recurrence per head (state C: (dk, dv), normalizer n: (dk,)):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T       n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+with exponential input gate i = exp(i_raw), forget gate f = sigmoid(f_raw),
+stabilized in log space by the running max m_t (as in the paper's appendix).
+Training uses a chunkwise form (like SSD) so no per-token (dk, dv) states
+are materialized; decode is the O(1) recurrence.
+
+sLSTM: per-unit scalar memory with block-diagonal (per-head) recurrent
+weights, computed with a sequential ``lax.scan`` (inherently recurrent —
+this is the paper's trade-off, and it shows up in the roofline as a long
+scalar dependency chain rather than MXU work).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMSpec
+from repro.models.layers import (causal_conv1d, causal_conv1d_init, dense_init,
+                                 rmsnorm, rmsnorm_init)
+
+Array = jax.Array
+
+
+def _mdims(cfg: ModelConfig, spec: XLSTMSpec):
+    d_inner = int(cfg.d_model * spec.proj_factor)
+    h = cfg.n_heads
+    dk = d_inner // h
+    return d_inner, h, dk
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, spec: XLSTMSpec, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, h, dk = _mdims(cfg, spec)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d_inner, dtype=dtype),      # x, z paths
+        "conv": causal_conv1d_init(ks[1], d_inner, spec.conv_window, dtype),
+        "wq": dense_init(ks[2], d_inner, d_inner, dtype=dtype),
+        "wk": dense_init(ks[3], d_inner, d_inner, dtype=dtype),
+        "wv": dense_init(ks[4], d_inner, d_inner, dtype=dtype),
+        "w_if": dense_init(ks[5], d_inner, 2 * h, scale=0.02, dtype=jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "w_down": dense_init(ks[6], d_inner, d, dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(params, u: Array, cfg, spec, conv_state=None):
+    d_inner, h, dk = _mdims(cfg, spec)
+    xz = u @ params["w_up"]
+    x_path, z = jnp.split(xz, 2, axis=-1)
+    if conv_state is None:
+        xc = causal_conv1d(params["conv"], x_path)
+        new_conv = None
+    else:
+        xc, new_conv = causal_conv1d(params["conv"], x_path, conv_state)
+    bsz, s, _ = u.shape
+    q = (xc @ params["wq"]).reshape(bsz, s, h, dk)
+    k = (xc @ params["wk"]).reshape(bsz, s, h, dk) * dk ** -0.5
+    v = (x_path @ params["wv"]).reshape(bsz, s, h, dk)
+    gif = xc.astype(jnp.float32) @ params["w_if"] + params["if_bias"]
+    li = gif[..., :h]                                   # log input gate (exp gate)
+    lf = jax.nn.log_sigmoid(gif[..., h:])               # log forget gate
+    return q, k, v, li, lf, z, new_conv
+
+
+def mlstm_prefill(params, u: Array, cfg: ModelConfig, spec: XLSTMSpec, *,
+                  make_cache: bool = False):
+    bsz, s, _ = u.shape
+    d_inner, h, dk = _mdims(cfg, spec)
+    conv0 = _zero_conv(params, bsz, u.dtype) if make_cache else None
+    q, k, v, li, lf, z, new_conv = _mlstm_qkvif(params, u, cfg, spec, conv0)
+    y, state = _mlstm_chunked(q, k, v, li, lf, spec.chunk)
+    y = y.reshape(bsz, s, d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["w_down"]
+    cache = None
+    if make_cache:
+        cache = {"C": state[0], "n": state[1], "m": state[2], "conv": new_conv}
+    return out, cache
+
+
+def mlstm_decode(params, u: Array, cfg: ModelConfig, spec: XLSTMSpec, cache: dict):
+    bsz = u.shape[0]
+    d_inner, h, dk = _mdims(cfg, spec)
+    q, k, v, li, lf, z, new_conv = _mlstm_qkvif(params, u, cfg, spec, cache["conv"])
+    q1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (q, k, v))
+    li1, lf1 = li[:, 0], lf[:, 0]                        # (B,H)
+    m_prev, c_prev, n_prev = cache["m"], cache["C"], cache["n"]
+    m_new = jnp.maximum(lf1 + m_prev, li1)
+    c_new = (c_prev * jnp.exp(lf1 + m_prev - m_new)[..., None, None]
+             + jnp.exp(li1 - m_new)[..., None, None]
+             * jnp.einsum("bhk,bhv->bhkv", k1, v1))
+    n_new = (n_prev * jnp.exp(lf1 + m_prev - m_new)[..., None]
+             + jnp.exp(li1 - m_new)[..., None] * k1)
+    num = jnp.einsum("bhk,bhkv->bhv", q1, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q1, n_new)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["w_down"], {"C": c_new, "n": n_new, "m": m_new,
+                                  "conv": new_conv}
+
+
+def init_mlstm_cache(params, cfg: ModelConfig, spec: XLSTMSpec, bsz: int, dtype):
+    d_inner, h, dk = _mdims(cfg, spec)
+    return {
+        "C": jnp.zeros((bsz, h, dk, dk), jnp.float32),
+        "n": jnp.zeros((bsz, h, dk), jnp.float32),
+        "m": jnp.full((bsz, h), -1e30, jnp.float32),
+        "conv": _zero_conv(params, bsz, dtype),
+    }
+
+
+def _zero_conv(params, bsz, dtype):
+    w = params["conv"]["w"]
+    return jnp.zeros((bsz, w.shape[0] - 1, w.shape[1]), dtype)
+
+
+def _mlstm_chunked(q, k, v, li, lf, chunk: int):
+    """Chunkwise stabilized mLSTM.  q/k/v: (B,S,H,D); li/lf: (B,S,H) f32.
+
+    Returns y (B,S,H,D) f32 and final (C, n, m) state.
+    """
+    bsz, s0, h, dk = q.shape
+    l = min(chunk, s0)
+    pad = (-s0) % l
+    if pad:
+        zp = lambda a, v=0.0: jnp.pad(
+            a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2), constant_values=v)
+        # li = -inf (no input), lf = 0 (decay 1) => carry state preserved
+        q, k, v = zp(q), zp(k), zp(v)
+        li, lf = zp(li, -1e30), zp(lf, 0.0)
+    s = s0 + pad
+    nc = s // l
+    rs = lambda a: a.reshape(bsz, nc, l, *a.shape[2:])
+    qc, kc, vc = (rs(a.astype(jnp.float32)) for a in (q, k, v))
+    lic, lfc = rs(li), rs(lf)
+
+    cumf = jnp.cumsum(lfc, axis=2)                     # within-chunk sum of lf
+    total = cumf[:, :, -1, :]                          # (B,NC,H)
+    # per-entry source weight (log): b_j = li_j - cumf_j  (for carry into i)
+    src = lic - cumf                                   # (B,NC,L,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+
+    # stabilizers: running max within chunk of src, combined with carry m
+    run_src = jax.lax.associative_scan(jnp.maximum, src, axis=2)  # (B,NC,L,H)
+
+    def scan_fn(carry, inp):
+        c_prev, n_prev, m_prev = carry                 # (B,H,dk,dk),(B,H,dk),(B,H)
+        qb, kb, vb, cumf_b, total_b, src_b, run_src_b, lic_b = inp
+        # intra-chunk pair weight (log): cumf_i - cumf_j + li_j  (i >= j)
+        pair_b = (cumf_b[:, :, None, :] - cumf_b[:, None, :, :]
+                  + lic_b[:, None, :, :])              # (B,L,L,H)
+        # per-position stabilizer: m_i = max(m_prev + cumf_i, cumf_i + runmax src)
+        m_loc = cumf_b + run_src_b                     # (B,L,H)
+        m_i = jnp.maximum(m_prev[:, None, :] + cumf_b, m_loc)
+        # inter-chunk: y_i += exp(cumf_i + m_prev - m_i) q_i . C_prev
+        w_carry = jnp.exp(cumf_b + m_prev[:, None, :] - m_i)     # (B,L,H)
+        y_inter = jnp.einsum("blhk,bhkv->blhv", qb, c_prev) * w_carry[..., None]
+        n_inter = jnp.einsum("blhk,bhk->blh", qb, n_prev) * w_carry
+
+        # intra-chunk: w_ij = exp(pair_ij - m_i); mask INSIDE the exp so the
+        # backward pass never sees inf * 0 (masked i<j entries can overflow)
+        wij = jnp.exp(jnp.where(mask[None, :, :, None],
+                                pair_b - m_i[:, :, None, :], -1e30))
+        scores = jnp.einsum("blhk,bmhk->blmh", qb, kb) * wij
+        y_intra = jnp.einsum("blmh,bmhv->blhv", scores, vb)
+        n_intra = jnp.einsum("blmh,bmhk->blhk", wij, kb)
+        n_intra_q = jnp.einsum("blhk,blhk->blh", qb, n_intra)
+
+        num = y_inter + y_intra
+        den = jnp.maximum(jnp.abs(n_inter + n_intra_q), jnp.exp(-m_i))
+        yb = num / den[..., None]
+
+        # carry update to end of chunk with new stabilizer
+        m_new = jnp.maximum(m_prev + total_b, total_b + run_src_b[:, -1, :])
+        wc = jnp.exp(m_prev + total_b - m_new)                    # (B,H)
+        ws = jnp.exp(total_b[:, None, :] + src_b - m_new[:, None, :])  # (B,L,H)
+        c_new = (c_prev * wc[..., None, None]
+                 + jnp.einsum("blh,blhk,blhv->bhkv", ws, kb, vb))
+        n_new = n_prev * wc[..., None] + jnp.einsum("blh,blhk->bhk", ws, kb)
+        return (c_new, n_new, m_new), yb
+
+    c0 = jnp.zeros((bsz, h, dk, dk), jnp.float32)
+    n0 = jnp.zeros((bsz, h, dk), jnp.float32)
+    m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    (cf, nf, mf), ys = jax.lax.scan(
+        scan_fn, (c0, n0, m0),
+        (mv(qc), mv(kc), mv(vc), mv(cumf), mv(total), mv(src), mv(run_src),
+         mv(lic)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, dk)[:, :s0]
+    return y, (cf, nf, mf)
+
+
+def mlstm_reference(q, k, v, li, lf):
+    """Sequential oracle for tests."""
+    bsz, s, h, dk = q.shape
+
+    def step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qt, kt, vt, lit, lft = inp
+        m_new = jnp.maximum(lft + m_prev, lit)
+        c_new = (c_prev * jnp.exp(lft + m_prev - m_new)[..., None, None]
+                 + jnp.exp(lit - m_new)[..., None, None]
+                 * jnp.einsum("bhk,bhv->bhkv", kt, vt))
+        n_new = (n_prev * jnp.exp(lft + m_prev - m_new)[..., None]
+                 + jnp.exp(lit - m_new)[..., None] * kt)
+        num = jnp.einsum("bhk,bhkv->bhv", qt, c_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n_new)),
+                          jnp.exp(-m_new))
+        return (c_new, n_new, m_new), num / den[..., None]
+
+    c0 = jnp.zeros((bsz, h, dk, dk), jnp.float32)
+    n0 = jnp.zeros((bsz, h, dk), jnp.float32)
+    m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+    mv = lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    (cf, nf, mf), ys = jax.lax.scan(
+        step, (c0, n0, m0), (mv(q), mv(k), mv(v), mv(li), mv(lf)))
+    return jnp.moveaxis(ys, 0, 1), (cf, nf, mf)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, spec: XLSTMSpec, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    d_ff = int(d * spec.slstm_proj_factor)
+    return {
+        # input weights for gates (i, f, z, o)
+        "w_in": dense_init(ks[0], d, 4 * d, dtype=dtype),
+        # block-diagonal recurrent weights per head: (H, dh, 4*dh)
+        "r": (jax.random.normal(ks[1], (h, dh, 4 * dh)) * dh ** -0.5
+              ).astype(dtype),
+        "bias": jnp.concatenate(
+            [jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]),
+        "norm": rmsnorm_init(d, dtype),
+        # position-wise gated FFN after the cell
+        "w_ff_gate": dense_init(ks[2], d, d_ff, dtype=dtype),
+        "w_ff_down": dense_init(ks[3], d_ff, d, dtype=dtype),
+    }
+
+
+def _slstm_step(params, carry, wx_t, cfg: ModelConfig):
+    """One recurrence step.  carry: (c, n, h, m) each (B, d)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    c_prev, n_prev, h_prev, m_prev = carry
+    bsz = c_prev.shape[0]
+    hh = h_prev.reshape(bsz, nh, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, params["r"]).reshape(bsz, 4 * d)
+    g = wx_t + rec + params["bias"]
+    gi, gf, gz, go = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m_prev, gi)
+    i_ = jnp.exp(gi - m_new)
+    f_ = jnp.exp(lf + m_prev - m_new)
+    z_ = jnp.tanh(gz)
+    o_ = jax.nn.sigmoid(go)
+    c_new = f_ * c_prev + i_ * z_
+    n_new = jnp.maximum(f_ * n_prev + i_, jnp.exp(-m_new))
+    h_new = o_ * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_prefill(params, u: Array, cfg: ModelConfig, spec: XLSTMSpec, *,
+                  make_cache: bool = False):
+    bsz, s, d = u.shape
+    wx = u @ params["w_in"]                                  # (B,S,4d)
+
+    def step(carry, wx_t):
+        new = _slstm_step(params, carry, wx_t, cfg)
+        return new, new[2]
+
+    carry0 = init_slstm_cache(params, cfg, spec, bsz, u.dtype)["state"]
+    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(u.dtype)               # (B,S,d)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = (jax.nn.silu(y @ params["w_ff_gate"])) @ params["w_ff_down"]
+    return y, ({"state": carry} if make_cache else None)
+
+
+def slstm_decode(params, u: Array, cfg: ModelConfig, spec: XLSTMSpec, cache: dict):
+    wx = (u @ params["w_in"])[:, 0]
+    new = _slstm_step(params, cache["state"], wx, cfg)
+    y = new[2][:, None].astype(u.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = (jax.nn.silu(y @ params["w_ff_gate"])) @ params["w_ff_down"]
+    return y, {"state": new}
+
+
+def init_slstm_cache(params, cfg: ModelConfig, spec: XLSTMSpec, bsz: int, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((bsz, d), jnp.float32)
+    return {"state": (z, jnp.ones_like(z), z, jnp.full((bsz, d), -1e30))}

@@ -1,0 +1,1 @@
+from repro.objectives import fair, lm  # noqa: F401

@@ -1,0 +1,111 @@
+"""Group-DRO language-model objective — the paper's Eq. (21) form applied to
+LM pretraining:
+
+    min_{theta, St-leaves on St(d,r)}  max_{y in simplex_G}
+        sum_g y_g * L_g(theta)  -  rho * ||y - 1/G||^2   (+ MoE aux loss)
+
+strongly concave in y (coefficient rho), with the exact inner maximizer
+y*(theta) = proj_simplex(1/G + L(theta) / (2 rho)) available in closed form
+for the convergence metric M_t.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.minimax import MinimaxProblem, project_simplex, stiefel_mask_from_paths
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+def token_ce(logits: Array, targets: Array, impl: str = "gather",
+             true_vocab: int = 0) -> Array:
+    """Per-sequence mean CE.  logits (B,S,V) or (B,S,CB,V); targets match.
+
+    impl="dot" computes the correct-class logit as a one-hot contraction
+    over the vocab dim: with a model-sharded vocab this keeps the reduction
+    local + a small all-reduce instead of gathering logits (§Perf).
+    """
+    lf = logits.astype(jnp.float32)
+    if true_vocab and lf.shape[-1] > true_vocab:
+        # padded unembedding rows (vocab_pad_to): exclude from the softmax
+        v_pad = lf.shape[-1]
+        mask = jnp.arange(v_pad) < true_vocab
+        lf = jnp.where(mask, lf, -1e30)
+    if impl == "dot":
+        v = lf.shape[-1]
+        m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        onehot = jax.nn.one_hot(targets, v, dtype=lf.dtype)
+        correct = jnp.sum(lf * onehot, axis=-1)
+        nll = lse - correct
+    else:
+        lp = jax.nn.log_softmax(lf, axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    # mean over sequence (and codebooks)
+    red = tuple(range(1, nll.ndim))
+    return nll.mean(axis=red)                                   # (B,)
+
+
+def group_losses(per_seq_loss: Array, group_ids: Array, n_groups: int) -> Array:
+    """Mean loss per group; groups absent from the batch get the batch mean
+    (so they neither attract nor repel the adversary)."""
+    oh = jax.nn.one_hot(group_ids, n_groups, dtype=jnp.float32)   # (B,G)
+    counts = oh.sum(0)
+    sums = (per_seq_loss[:, None] * oh).sum(0)
+    mean_all = per_seq_loss.mean()
+    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), mean_all)
+
+
+def lm_minimax_loss(params, y: Array, batch: dict, cfg: ModelConfig) -> Array:
+    tokens = batch["tokens"]
+    fe = batch.get("frontend_embeds")
+    logits, aux, _ = T.forward(params, cfg, tokens[..., :-1, :]
+                               if cfg.n_codebooks > 1 else tokens[:, :-1],
+                               frontend_embeds=fe, mode="train")
+    targets = tokens[..., 1:, :] if cfg.n_codebooks > 1 else tokens[:, 1:]
+    per_seq = token_ce(logits, targets, impl=cfg.ce_impl,
+                       true_vocab=cfg.vocab_size)
+    lg = group_losses(per_seq, batch["group_ids"], cfg.n_groups)
+    robust = jnp.dot(y, lg) - cfg.rho * jnp.sum(
+        (y - 1.0 / cfg.n_groups) ** 2)
+    return robust + aux
+
+
+def lm_y_star(params, batches: dict, cfg: ModelConfig) -> Array:
+    """Exact global inner maximizer at shared params (node-stacked batch)."""
+    def one(b):
+        tokens = b["tokens"]
+        fe = b.get("frontend_embeds")
+        logits, _, _ = T.forward(params, cfg, tokens[..., :-1, :]
+                                 if cfg.n_codebooks > 1 else tokens[:, :-1],
+                                 frontend_embeds=fe, mode="train")
+        targets = tokens[..., 1:, :] if cfg.n_codebooks > 1 else tokens[:, 1:]
+        return group_losses(token_ce(logits, targets, impl=cfg.ce_impl,
+                                     true_vocab=cfg.vocab_size),
+                            b["group_ids"], cfg.n_groups)
+    lg = jnp.mean(jax.vmap(one)(batches), axis=0)
+    return project_simplex(1.0 / cfg.n_groups + lg / (2.0 * cfg.rho))
+
+
+def make_lm_problem(cfg: ModelConfig, params_template) -> MinimaxProblem:
+    import re
+    pattern = re.compile(cfg.manifold_policy)
+    mask = stiefel_mask_from_paths(
+        params_template, lambda path: bool(pattern.search(path)))
+    return MinimaxProblem(
+        loss_fn=functools.partial(lm_minimax_loss, cfg=cfg),
+        project_y=project_simplex,
+        stiefel_mask=mask,
+        y_star=functools.partial(lm_y_star, cfg=cfg),
+        name=f"group-dro-lm/{cfg.name}",
+    )
+
+
+def init_y(cfg: ModelConfig, n_nodes: int) -> Array:
+    return jnp.full((n_nodes, cfg.n_groups), 1.0 / cfg.n_groups, jnp.float32)

@@ -1,0 +1,183 @@
+"""Parameter / batch / state partitioning rules.
+
+Training mesh axes: ("pod",) "node", "fsdp", "model"
+  * every training-state leaf is node-stacked: axis 0 -> ("pod","node")
+  * within a node replica: megatron-ish — last dim to "model" when
+    divisible, first remaining divisible dim to "fsdp" (ZeRO-style);
+    MoE expert stacks put the expert dim on "model" (expert parallelism).
+  * anything that doesn't divide cleanly is replicated on that axis
+    (e.g. smollm's 9 heads vs a 16-way model axis) — correctness never
+    depends on a sharding, only memory/perf do.
+
+Serving mesh axes: ("pod",) "data", "model"
+  * params: last dim "model", first remaining divisible dim "data"
+    (weight-gathered serving); batch dims over ("pod","data");
+  * KV caches: batch over ("pod","data") when divisible, otherwise the
+    *sequence* dim is sharded (long_500k batch=1 -> sequence-parallel cache).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# params whose *first non-node* dim is an expert stack
+_EXPERT_RE = re.compile(r"moe/(w_gate|w_up|w_down)$")
+_ROUTER_RE = re.compile(r"moe/router$")
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def path_of(path_tuple) -> str:
+    return "/".join(_key_str(k) for k in path_tuple)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _assign(shape: tuple[int, ...], axes: list[tuple[str, int]],
+            prefer_last_first: bool = True) -> list[Optional[str]]:
+    """Greedy: give each mesh axis a distinct divisible tensor dim."""
+    spec: list[Optional[str]] = [None] * len(shape)
+    order = list(range(len(shape)))
+    if prefer_last_first:
+        order = order[::-1]
+    for ax_name, ax_size in axes:
+        if ax_size == 1:
+            continue
+        for d in order:
+            if spec[d] is None and shape[d] % ax_size == 0 and shape[d] >= ax_size:
+                spec[d] = ax_name
+                break
+    return spec
+
+
+def train_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                     multi_pod: bool) -> P:
+    """Spec for a node-stacked training parameter (axis 0 = node)."""
+    node_axes = ("pod", "node") if multi_pod else ("node",)
+    inner = shape[1:]
+    model, fsdp = _axis_size(mesh, "model"), _axis_size(mesh, "fsdp")
+    if len(inner) == 0:
+        return P(node_axes)
+    if len(inner) == 1:
+        # 1-D (norm scales, biases): shard over fsdp when big enough
+        if inner[0] % fsdp == 0 and inner[0] >= 1024 and fsdp > 1:
+            return P(node_axes, "fsdp")
+        return P(node_axes)
+    if _EXPERT_RE.search(path) and inner[0] % model == 0:
+        # (E, d, f): experts -> model, then fsdp on the biggest remaining dim
+        rest = _assign(inner[1:], [("fsdp", fsdp)])
+        return P(node_axes, "model", *rest)
+    spec = _assign(inner, [("model", model), ("fsdp", fsdp)])
+    return P(node_axes, *spec)
+
+
+def serve_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    model, data = _axis_size(mesh, "model"), _axis_size(mesh, "data")
+    if len(shape) <= 1:
+        return P()
+    if _EXPERT_RE.search(path) and shape[0] % model == 0:
+        rest = _assign(shape[1:], [("data", data)])
+        return P("model", *rest)
+    spec = _assign(shape, [("model", model), ("data", data)])
+    return P(*spec)
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def train_state_shardings(state_shapes: PyTree, mesh: Mesh,
+                          multi_pod: bool) -> PyTree:
+    """Shardings for a GDAState (or baseline state) pytree of ShapeDtype."""
+    node_axes = ("pod", "node") if multi_pod else ("node",)
+
+    def one(path_tuple, leaf):
+        path = path_of(path_tuple)
+        shape = leaf.shape
+        # y-like small leaves: (N, G) / scalars
+        if len(shape) == 0:
+            return _named(mesh, P())
+        if len(shape) <= 2:
+            return _named(mesh, P(node_axes))
+        return _named(mesh, train_param_spec(path, shape, mesh, multi_pod))
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)
+
+
+def train_batch_shardings(batch_shapes: PyTree, mesh: Mesh,
+                          multi_pod: bool) -> PyTree:
+    node_axes = ("pod", "node") if multi_pod else ("node",)
+    fsdp = _axis_size(mesh, "fsdp")
+
+    def one(path_tuple, leaf):
+        shape = leaf.shape
+        if len(shape) >= 2 and shape[1] % fsdp == 0:
+            return _named(mesh, P(node_axes, "fsdp"))
+        return _named(mesh, P(node_axes))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def serve_param_shardings(param_shapes: PyTree, mesh: Mesh) -> PyTree:
+    def one(path_tuple, leaf):
+        return _named(mesh, serve_param_spec(path_of(path_tuple), leaf.shape,
+                                             mesh))
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def serve_batch_shardings(spec_tree: PyTree, mesh: Mesh,
+                          multi_pod: bool) -> PyTree:
+    """token/position/cache/frontend shardings for serve_step inputs."""
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    n_data = int(np.prod([_axis_size(mesh, a) for a in data_axes]))
+    model = _axis_size(mesh, "model")
+
+    def one(path_tuple, leaf):
+        path = path_of(path_tuple)
+        shape = leaf.shape
+        if len(shape) == 0:
+            return _named(mesh, P())
+        batch_ok = shape[0] % n_data == 0 and shape[0] >= n_data
+        if len(shape) == 1:
+            return _named(mesh, P(data_axes if batch_ok else None))
+        spec: list = [data_axes if batch_ok else None] + [None] * (len(shape) - 1)
+        if not batch_ok and len(shape) >= 2 and shape[1] % n_data == 0 \
+                and shape[1] >= n_data:
+            spec[1] = data_axes            # sequence-parallel cache (B=1)
+        # kv-head / hidden dims onto model when divisible
+        for d in range(len(shape) - 1, 1, -1):
+            if spec[d] is None and shape[d] % model == 0 and shape[d] >= model:
+                spec[d] = "model"
+                break
+        return _named(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, spec_tree)
+
+
+def project_params_to_manifold(params: PyTree, mask: PyTree) -> PyTree:
+    """Project masked leaves onto St(d,r) (used once at init so every leaf
+    the policy selects starts feasible, regardless of its initializer).
+
+    Uses QR orthonormalization: exact feasibility regardless of the raw
+    initializer's conditioning (polar/NS inverse-sqrt loses digits when
+    x^T x has tiny eigenvalues, e.g. 1/sqrt(d)-scaled dense inits).  The
+    algorithm only needs x0 ON the manifold, not the nearest point."""
+    from repro.core import manifolds
+
+    return jax.tree.map(
+        lambda m, x: manifolds.retract_qr(jnp.zeros_like(x), x) if m else x,
+        mask, params)

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (REQUIRED): instantiate the REDUCED variant
+of each assigned architecture and run one forward + one decentralized
+minimax train step on CPU, asserting output shapes and no NaNs.  Also one
+serve_step decode against a fresh cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.synthetic import TokenStream
+from repro.launch.steps import build_trainer, init_train_state, make_serve_step
+from repro.models import transformer as T
+
+N_NODES = 2
+BPN = 2
+SEQ = 32
+
+
+def _batch(cfg):
+    stream = TokenStream(n_nodes=N_NODES, batch_per_node=BPN, seq_len=SEQ,
+                         vocab_size=cfg.vocab_size, n_groups=cfg.n_groups,
+                         n_codebooks=cfg.n_codebooks, seed=0)
+    b = {k: jnp.asarray(v) for k, v in stream.batch(0).items()}
+    if cfg.frontend is not None:
+        b["frontend_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(0),
+            (N_NODES, BPN, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+    return b
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+
+    # --- forward shape check -------------------------------------------
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tok_shape = (2, SEQ) if cfg.n_codebooks == 1 else (2, SEQ, cfg.n_codebooks)
+    toks = jax.random.randint(jax.random.PRNGKey(1), tok_shape, 0,
+                              cfg.vocab_size)
+    fe = None
+    if cfg.frontend is not None:
+        fe = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2),
+            (2, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+    logits, aux, _ = T.forward(params, cfg, toks, frontend_embeds=fe)
+    want = (2, SEQ, cfg.vocab_size) if cfg.n_codebooks == 1 else \
+        (2, SEQ, cfg.n_codebooks, cfg.vocab_size)
+    assert logits.shape == want
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    # --- one DRSGDA train step -----------------------------------------
+    opt, problem = build_trainer(cfg, N_NODES, optimizer="drsgda")
+    batch = _batch(cfg)
+    state = init_train_state(jax.random.PRNGKey(3), cfg, opt, N_NODES, batch)
+    state, metrics = opt.step(state, batch)
+    assert np.isfinite(float(metrics.loss))
+    assert np.isfinite(float(metrics.grad_norm_x))
+    # params keep their structure/shapes and stay finite
+    for a, b in zip(jax.tree.leaves(state.x), jax.tree.leaves(state.u)):
+        assert a.shape == b.shape
+        assert bool(jnp.isfinite(a.astype(jnp.float32)).all())
+    # Stiefel leaves stay feasible after the retraction step
+    from repro.core.minimax import validate_stiefel
+    assert float(validate_stiefel(
+        jax.tree.map(lambda l: l[0], state.x), problem.stiefel_mask)) < 1e-3
+    # at least one leaf is manifold-constrained for attention archs
+    n_stiefel = sum(bool(m) for m in jax.tree.leaves(problem.stiefel_mask))
+    if cfg.family != "ssm":
+        assert n_stiefel > 0
+    else:
+        assert n_stiefel > 0  # xlstm: mlstm wq/wk/wv/w_down leaves
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_serve_decode(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    b = 2
+    cache = T.init_cache(cfg, b, SEQ)
+    tok = jnp.zeros((b,) if cfg.n_codebooks == 1 else (b, cfg.n_codebooks),
+                    jnp.int32)
+    pos = jnp.full((b,), SEQ - 1, jnp.int32)
+    fe = None
+    if cfg.frontend is not None:
+        fe = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2),
+            (b, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+    step = make_serve_step(cfg)
+    logits, new_cache = step(params, tok, pos, cache, frontend_embeds=fe)
+    want = (b, cfg.vocab_size) if cfg.n_codebooks == 1 else \
+        (b, cfg.n_codebooks, cfg.vocab_size)
+    assert logits.shape == want
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+def test_long_context_override_transforms_all_full_attention():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        if not configs.needs_long_context_override(cfg):
+            continue
+        cfg2 = configs.long_context_override(cfg)
+        assert not configs.needs_long_context_override(cfg2)
+        # native windows are preserved (gemma3 locals keep 1024)
+        if arch == "gemma3-27b":
+            wins = {b.attn.sliding_window for st in cfg2.stages
+                    for b in st.blocks}
+            assert 1024 in wins and configs.LONG_CONTEXT_WINDOW in wins
+
+
+def test_all_full_configs_have_exact_card_dims():
+    card = {
+        "deepseek-v2-236b": (60, 5120, 128, 102400),
+        "gemma3-27b": (62, 5376, 32, 262144),
+        "granite-3-2b": (40, 2048, 32, 49155),
+        "granite-3-8b": (40, 4096, 32, 49155),
+        "zamba2-2.7b": (54, 2560, 32, 32000),
+        "llama-3.2-vision-11b": (40, 4096, 32, 128256),
+        "smollm-135m": (30, 576, 9, 49152),
+        "musicgen-large": (48, 2048, 32, 2048),
+        "granite-moe-1b-a400m": (24, 1024, 16, 49155),
+        "xlstm-1.3b": (48, 2048, 4, 50304),
+    }
+    for arch, (nl, d, h, v) in card.items():
+        cfg = configs.get_config(arch)
+        assert cfg.n_layers == nl, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == h, arch
+        assert cfg.vocab_size == v, arch

@@ -1,0 +1,88 @@
+"""Gossip/consensus substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gossip as G
+
+SET = dict(deadline=None, max_examples=15)
+
+
+@pytest.mark.parametrize("topology,n", [
+    ("ring", 3), ("ring", 8), ("ring", 20), ("full", 5), ("torus", 12),
+    ("star", 6),
+])
+def test_mixing_matrix_doubly_stochastic(topology, n):
+    w = G.mixing_matrix(topology, n)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    assert (w >= 0).all()
+    assert G.second_largest_eigenvalue(w) < 1.0
+
+
+@given(st.integers(3, 16), st.integers(1, 5), st.integers(0, 1000))
+@settings(**SET)
+def test_ring_mix_matches_dense(n, steps, seed):
+    w = jnp.asarray(G.ring_matrix(n), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 7))
+    dense = G.mix_dense(w, x, steps=steps)
+    ring = G.mix_ring(x, steps=steps)
+    np.testing.assert_allclose(dense, ring, atol=1e-5)
+
+
+@given(st.integers(2, 16), st.integers(0, 1000))
+@settings(**SET)
+def test_mixing_preserves_mean(n, seed):
+    """W doubly stochastic => gossip preserves the average (the consensus
+    invariant the decentralized analysis leans on)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 5))
+    spec = G.GossipSpec(topology="ring", n_nodes=n, k_steps=3)
+    mixed = spec.mix(x)
+    np.testing.assert_allclose(jnp.mean(mixed, 0), jnp.mean(x, 0), atol=1e-5)
+
+
+def test_gossip_contracts_to_consensus():
+    n = 12
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 4))
+    spec = G.GossipSpec(topology="ring", n_nodes=n)
+    var0 = float(jnp.var(x, axis=0).sum())
+    x200 = spec.mix(x, steps=200)
+    var200 = float(jnp.var(x200, axis=0).sum())
+    assert var200 < 1e-6 * max(var0, 1e-9)
+
+
+def test_theorem1_k_prescription():
+    for n in (4, 16, 20, 64):
+        w = G.ring_matrix(n)
+        k = G.required_gossip_steps(w, n)
+        lam = G.second_largest_eigenvalue(w)
+        assert lam ** k <= 1.0 / (2.0 * np.sqrt(n)) + 1e-12
+        # minimality: one fewer step violates the bound
+        if k > 1:
+            assert lam ** (k - 1) > 1.0 / (2.0 * np.sqrt(n))
+
+
+def test_mix_pytree_and_small_n():
+    tree = {"a": jnp.ones((1, 3)), "b": jnp.arange(8.0).reshape(2, 4)}
+    spec1 = G.GossipSpec(topology="ring", n_nodes=1, k_steps=4)
+    out1 = spec1.mix({"a": tree["a"]})
+    np.testing.assert_allclose(out1["a"], tree["a"])
+    spec2 = G.GossipSpec(topology="ring", n_nodes=2, k_steps=1)
+    out2 = spec2.mix({"b": tree["b"]})
+    np.testing.assert_allclose(out2["b"][0], tree["b"].mean(0), atol=1e-6)
+
+
+def test_ring_mix_kernel_matches_gossip_hop():
+    """kernels.ops.ring_mix == one hop of mix_ring on the local view."""
+    from repro.kernels import ops
+    n = 6
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, 5, 4))
+    hop = G.mix_ring(x, steps=1)
+    left = jnp.roll(x, 1, axis=0)
+    right = jnp.roll(x, -1, axis=0)
+    fused = ops.ring_mix(x, left, right, w_self=1 / 3, w_side=1 / 3,
+                         impl="pallas_interpret")
+    np.testing.assert_allclose(hop, fused, atol=1e-6)

@@ -1,0 +1,128 @@
+"""Property tests for the Stiefel primitives (paper Preliminaries)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import manifolds as M
+
+SET = dict(deadline=None, max_examples=15)
+
+
+def _rand_point(seed, d, r):
+    return M.random_stiefel(jax.random.PRNGKey(seed), d, r)
+
+
+@st.composite
+def dims(draw):
+    d = draw(st.integers(3, 48))
+    r = draw(st.integers(1, min(d, 12)))
+    seed = draw(st.integers(0, 2 ** 16))
+    return d, r, seed
+
+
+@given(dims())
+@settings(**SET)
+def test_tangent_projection_properties(dr):
+    d, r, seed = dr
+    x = _rand_point(seed, d, r)
+    g = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, r))
+    u = M.tangent_project(x, g)
+    # u is tangent: x^T u + u^T x = 0
+    assert M.is_tangent(x, u, atol=1e-4)
+    # idempotent
+    np.testing.assert_allclose(M.tangent_project(x, u), u, atol=1e-5)
+    # P(x) = 0  (the identity the consensus step relies on)
+    np.testing.assert_allclose(M.tangent_project(x, x), 0.0, atol=1e-5)
+
+
+@given(dims())
+@settings(**SET)
+def test_polar_retraction_feasibility_and_rigidity(dr):
+    d, r, seed = dr
+    x = _rand_point(seed, d, r)
+    g = jax.random.normal(jax.random.PRNGKey(seed + 2), (d, r))
+    u = M.tangent_project(x, g)
+    y = M.retract_polar(x, 0.1 * u)
+    assert float(M.stiefel_error(y)) < 1e-4
+    # R_x(0) = x
+    np.testing.assert_allclose(M.retract_polar(x, jnp.zeros_like(x)), x,
+                               atol=1e-5)
+
+
+@given(dims())
+@settings(**SET)
+def test_polar_nonexpansiveness_lemma1(dr):
+    """Lemma 1 (Eq. 7): ||R_x(u) - z|| <= ||x + u - z|| for z on St."""
+    d, r, seed = dr
+    x = _rand_point(seed, d, r)
+    z = _rand_point(seed + 7, d, r)
+    u = M.tangent_project(x, jax.random.normal(jax.random.PRNGKey(seed + 3),
+                                               (d, r)))
+    u = 0.5 * u
+    lhs = float(jnp.linalg.norm(M.retract_polar(x, u, method="eigh") - z))
+    rhs = float(jnp.linalg.norm(x + u - z))
+    assert lhs <= rhs + 1e-4
+
+
+@given(dims())
+@settings(**SET)
+def test_second_order_boundedness_eq6(dr):
+    """Eq. (6): ||R_x(u) - (x+u)|| <= M ||u||^2 — check with a generous M."""
+    d, r, seed = dr
+    x = _rand_point(seed, d, r)
+    u = M.tangent_project(x, jax.random.normal(jax.random.PRNGKey(seed + 4),
+                                               (d, r)))
+    for scale in (0.3, 0.1, 0.03):
+        us = scale * u / max(float(jnp.linalg.norm(u)), 1e-9)
+        resid = float(jnp.linalg.norm(M.retract_polar(x, us) - (x + us)))
+        assert resid <= 2.0 * float(jnp.sum(us * us)) + 1e-5
+
+
+def test_newton_schulz_matches_eigh():
+    for seed, (d, r) in enumerate([(16, 4), (64, 16), (128, 128), (200, 9)]):
+        x = _rand_point(seed, d, r)
+        u = 0.2 * M.tangent_project(
+            x, jax.random.normal(jax.random.PRNGKey(seed + 5), (d, r)))
+        y_ns = M.retract_polar(x, u, method="ns")
+        y_ei = M.retract_polar(x, u, method="eigh")
+        np.testing.assert_allclose(y_ns, y_ei, atol=5e-5)
+
+
+def test_project_stiefel_is_nearest_point():
+    x = _rand_point(0, 20, 5)
+    a = x + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (20, 5))
+    p = M.project_stiefel(a, method="eigh")
+    assert float(M.stiefel_error(p)) < 1e-4
+    # projection is at least as close as x itself
+    assert float(jnp.linalg.norm(a - p)) <= float(jnp.linalg.norm(a - x)) + 1e-6
+
+
+def test_iam_consensus(rng):
+    base = _rand_point(3, 24, 6)
+    pert = jnp.asarray(rng.normal(size=(8, 24, 6)) * 0.01, jnp.float32)
+    xs = jax.vmap(lambda e: M.retract_polar(base, M.tangent_project(base, e)))(pert)
+    xhat = M.induced_arithmetic_mean(xs, method="eigh")
+    assert float(M.stiefel_error(xhat)) < 1e-4
+    # IAM of identical points is the point
+    same = jnp.broadcast_to(base[None], (5, 24, 6))
+    np.testing.assert_allclose(M.induced_arithmetic_mean(same, "eigh"), base,
+                               atol=1e-5)
+    assert float(M.consensus_error(same)) < 1e-9
+
+
+def test_rgd_step_descends():
+    a = jax.random.normal(jax.random.PRNGKey(2), (16, 16))
+    a = (a + a.T) / 2
+
+    def f(x):
+        return -jnp.trace(x.T @ a @ x)     # PCA: minimize negative Rayleigh
+
+    x = _rand_point(9, 16, 3)
+    vals = [float(f(x))]
+    for _ in range(50):
+        x = M.rgd_step(x, jax.grad(f)(x), 0.05)
+        vals.append(float(f(x)))
+    assert vals[-1] < vals[0]
+    assert float(M.stiefel_error(x)) < 1e-4

@@ -1,0 +1,182 @@
+"""Model-zoo correctness: chunked cores vs sequential oracles; prefill vs
+token-by-token decode for every block family; MoE dispatch vs dense oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AttnSpec, BlockSpec, FrontendSpec, ModelConfig,
+                                MoESpec, SSMSpec, XLSTMSpec, patterned_stages,
+                                uniform_stages)
+from repro.models import moe, ssm, transformer as T, xlstm
+
+TOKS = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 97)
+GLOB = BlockSpec(kind="attn", attn=AttnSpec(kind="gqa"))
+
+
+def _decode_matches_forward(cfg, params, toks, fe=None, n_steps=3, atol=2e-5):
+    lp, _, caches = T.forward(params, cfg, toks, mode="prefill",
+                              cache_len=toks.shape[1] + n_steps + 1,
+                              frontend_embeds=fe)
+    cur = toks
+    ld = lp[:, -1]
+    errs = []
+    for t in range(n_steps):
+        nxt = jnp.argmax(ld, -1)
+        cur = jnp.concatenate(
+            [cur, nxt[:, None] if cfg.n_codebooks == 1 else nxt[:, None, :]], 1)
+        lf, _, _ = T.forward(params, cfg, cur, frontend_embeds=fe)
+        pos = jnp.full((toks.shape[0],), toks.shape[1] + t, jnp.int32)
+        ld, caches = T.decode_step(params, cfg, nxt, pos, caches,
+                                   frontend_embeds=fe)
+        errs.append(float(jnp.abs(ld - lf[:, -1]).max()))
+    assert max(errs) < atol, errs
+
+
+def test_ssd_chunked_vs_sequential():
+    B, S, H, P, N = 2, 100, 4, 16, 8       # non-multiple of chunk
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    b_ = jax.random.normal(ks[1], (B, S, H, N))
+    c_ = jax.random.normal(ks[2], (B, S, H, N))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    la = -dt * jnp.exp(jax.random.normal(ks[4], (B, S, H)) * 0.5)
+    y1, h1 = ssm._ssd_chunked(x, b_, c_, dt, la, 32)
+    y0, h0 = ssm.ssd_reference(x, b_, c_, dt, la)
+    np.testing.assert_allclose(y1, y0, atol=1e-4)
+    np.testing.assert_allclose(h1, h0, atol=1e-4)
+
+
+def test_mlstm_chunked_vs_sequential():
+    B, S, H, D = 2, 72, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q, k, v = (jax.random.normal(kk, (B, S, H, D)) for kk in ks[:3])
+    li = jax.random.normal(ks[3], (B, S, H)) * 2.0
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)) + 2.0)
+    y1, (c1, n1, m1) = xlstm._mlstm_chunked(q, k, v, li, lf, 16)
+    y0, (c0, n0, m0) = xlstm.mlstm_reference(q, k, v, li, lf)
+    np.testing.assert_allclose(y1, y0, atol=2e-3)
+    np.testing.assert_allclose(c1, c0, atol=1e-4)
+    np.testing.assert_allclose(m1, m0, atol=1e-5)
+
+
+def test_moe_dispatch_matches_dense_oracle():
+    cfg = ModelConfig(d_model=32, d_ff=64)
+    spec = MoESpec(n_experts=8, top_k=2, d_expert=64, n_shared=1,
+                   capacity_factor=2.0)
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    y, aux = moe.apply_moe(params, x, spec)
+
+    t = 32
+    xf = x.reshape(t, 32)
+    probs = jax.nn.softmax(xf @ params["router"], -1)
+    gv, gi = jax.lax.top_k(probs, spec.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    y_ref = jnp.zeros((t, 32))
+    for e in range(spec.n_experts):
+        h = jax.nn.silu(xf @ params["w_gate"][e]) * (xf @ params["w_up"][e])
+        wsel = jnp.sum(jnp.where(gi == e, gv, 0.0), -1)
+        y_ref += (h @ params["w_down"][e]) * wsel[:, None]
+    sh = params["shared"]
+    y_ref += (jax.nn.silu(xf @ sh["w_gate"]) * (xf @ sh["w_up"])) @ sh["w_down"]
+    np.testing.assert_allclose(y, y_ref.reshape(2, 16, 32), atol=1e-5)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 some tokens overflow and are dropped, but
+    output stays finite and shared experts still serve every token."""
+    cfg = ModelConfig(d_model=16, d_ff=32)
+    spec = MoESpec(n_experts=4, top_k=2, d_expert=32, n_shared=1,
+                   capacity_factor=0.25)
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 16))
+    y, _ = moe.apply_moe(params, x, spec)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_dense_swa_decode():
+    local = BlockSpec(kind="attn", attn=AttnSpec(kind="gqa", sliding_window=8))
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=97, stages=patterned_stages(
+                          [local, local, GLOB], 6), remat=False)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    _decode_matches_forward(cfg, params, TOKS)
+
+
+def test_hybrid_mamba_decode():
+    mb = BlockSpec(kind="mamba", ssm=SSMSpec(d_state=8, head_dim=16, chunk=16))
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=97, stages=patterned_stages([mb, mb, GLOB], 6),
+                      remat=False)
+    params = T.init_params(jax.random.PRNGKey(6), cfg)
+    _decode_matches_forward(cfg, params, TOKS, atol=5e-5)
+
+
+def test_xlstm_decode():
+    xs = XLSTMSpec(chunk=16)
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=4, d_ff=0,
+                      vocab_size=97,
+                      stages=patterned_stages(
+                          [BlockSpec(kind="mlstm", xlstm=xs),
+                           BlockSpec(kind="slstm", xlstm=xs)], 4),
+                      remat=False)
+    params = T.init_params(jax.random.PRNGKey(7), cfg)
+    _decode_matches_forward(cfg, params, TOKS, atol=5e-5)
+
+
+def test_mla_decode():
+    mla = BlockSpec(kind="attn", attn=AttnSpec(
+        kind="mla", q_lora_rank=32, kv_lora_rank=16, qk_rope_head_dim=8,
+        qk_nope_head_dim=16, v_head_dim=16))
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=97, stages=uniform_stages(mla, 4), remat=False)
+    params = T.init_params(jax.random.PRNGKey(9), cfg)
+    _decode_matches_forward(cfg, params, TOKS)
+
+
+def test_vlm_cross_attention_uses_image():
+    xa = BlockSpec(kind="attn", attn=AttnSpec(kind="gqa", cross_attn=True))
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=97, stages=patterned_stages([GLOB, xa], 4),
+                      frontend=FrontendSpec(kind="vision", n_tokens=12,
+                                            embed_dim=48),
+                      remat=False)
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    fe1 = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 48))
+    fe2 = jax.random.normal(jax.random.PRNGKey(4), (2, 12, 48))
+    l1, _, _ = T.forward(params, cfg, TOKS, frontend_embeds=fe1)
+    l2, _, _ = T.forward(params, cfg, TOKS, frontend_embeds=fe2)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4   # image actually matters
+    _decode_matches_forward(cfg, params, TOKS, fe=fe1)
+
+
+def test_audio_multicodebook():
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=33, n_codebooks=4,
+                      stages=uniform_stages(GLOB, 4), remat=False)
+    params = T.init_params(jax.random.PRNGKey(4), cfg)
+    ta = jax.random.randint(jax.random.PRNGKey(5), (2, 16, 4), 0, 33)
+    logits, _, _ = T.forward(params, cfg, ta)
+    assert logits.shape == (2, 16, 4, 33)
+    _decode_matches_forward(cfg, params, ta)
+
+
+def test_remat_grads_match_no_remat():
+    import dataclasses
+    cfg = ModelConfig(d_model=48, n_heads=4, n_kv_heads=2, d_ff=96,
+                      vocab_size=50, stages=uniform_stages(GLOB, 4),
+                      remat=True)
+    params = T.init_params(jax.random.PRNGKey(10), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(11), (2, 12), 0, 50)
+
+    def loss(p, c):
+        lg, aux, _ = T.forward(p, c, toks)
+        oh = jax.nn.one_hot(toks, 50)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(lg) * oh, -1)) + aux
+
+    g1 = jax.grad(loss)(params, cfg)
+    g2 = jax.grad(loss)(params, dataclasses.replace(cfg, remat=False))
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b, atol=1e-5)

@@ -1,0 +1,115 @@
+"""Objective-layer tests: simplex geometry, closed-form inner maximizers,
+strong concavity, group losses, CNN fair/DRO problems."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.core.minimax import project_simplex
+from repro.data.synthetic import ClassificationStream, TokenStream
+from repro.models import transformer as T
+from repro.objectives import fair, lm
+
+SET = dict(deadline=None, max_examples=20)
+
+
+@given(st.integers(2, 12), st.integers(0, 10000))
+@settings(**SET)
+def test_project_simplex_properties(k, seed):
+    y = jax.random.normal(jax.random.PRNGKey(seed), (k,)) * 3.0
+    p = project_simplex(y)
+    assert float(jnp.abs(p.sum() - 1.0)) < 1e-5
+    assert float(p.min()) >= -1e-7
+    # projection of a simplex point is itself
+    q = jax.nn.softmax(y)
+    np.testing.assert_allclose(project_simplex(q), q, atol=1e-5)
+
+
+@given(st.integers(2, 8), st.integers(0, 1000))
+@settings(**SET)
+def test_project_simplex_is_euclidean_projection(k, seed):
+    """Check against brute-force optimality: the projection must be at
+    least as close as softmax / uniform / one-hot candidates."""
+    y = jax.random.normal(jax.random.PRNGKey(seed), (k,)) * 2.0
+    p = project_simplex(y)
+    d_p = float(jnp.sum((y - p) ** 2))
+    for cand in [jax.nn.softmax(y), jnp.full((k,), 1.0 / k),
+                 jax.nn.one_hot(jnp.argmax(y), k)]:
+        assert d_p <= float(jnp.sum((y - cand) ** 2)) + 1e-5
+
+
+def test_group_losses_fallback():
+    per_seq = jnp.array([1.0, 2.0, 3.0, 4.0])
+    gids = jnp.array([0, 0, 2, 2])
+    lg = lm.group_losses(per_seq, gids, 4)
+    np.testing.assert_allclose(lg, [1.5, 2.5, 3.5, 2.5], atol=1e-6)
+
+
+def test_lm_loss_strongly_concave_in_y():
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    stream = TokenStream(2, 2, 16, cfg.vocab_size, n_groups=cfg.n_groups)
+    batch = {k: jnp.asarray(v[0]) for k, v in stream.batch(0).items()}
+    f = functools.partial(lm.lm_minimax_loss, params, batch=batch, cfg=cfg)
+    hess = jax.hessian(f)(jnp.full((cfg.n_groups,), 1.0 / cfg.n_groups))
+    eig = np.linalg.eigvalsh(np.asarray(hess))
+    # strong concavity with modulus 2*rho (loss part is linear in y)
+    assert eig.max() <= -2.0 * cfg.rho + 1e-4
+
+
+def test_lm_y_star_is_argmax():
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    stream = TokenStream(3, 2, 16, cfg.vocab_size, n_groups=cfg.n_groups)
+    batches = {k: jnp.asarray(v) for k, v in stream.batch(0).items()}
+    y_opt = lm.lm_y_star(params, batches, cfg)
+    assert float(jnp.abs(y_opt.sum() - 1.0)) < 1e-5
+
+    def g_val(y):
+        vals = jax.vmap(lambda b: lm.lm_minimax_loss(
+            params, y, b, cfg))( batches)
+        return float(jnp.mean(vals))
+
+    v_star = g_val(y_opt)
+    for seed in range(5):
+        y_alt = project_simplex(
+            y_opt + 0.1 * jax.random.normal(jax.random.PRNGKey(seed),
+                                            y_opt.shape))
+        assert g_val(y_alt) <= v_star + 1e-4
+
+
+def test_fair_cnn_problem_end_to_end():
+    stream = ClassificationStream(n_nodes=2, batch_per_node=16)
+    params = fair.init_cnn(jax.random.PRNGKey(0), image_hw=stream.image_hw)
+    prob = fair.make_fair_problem(params)
+    batch = {k: jnp.asarray(v[0]) for k, v in stream.batch(0).items()}
+    u = jnp.full((3,), 1 / 3)
+    val = prob.value(params, u, batch)
+    assert np.isfinite(float(val))
+    gx, gy = prob.grads(params, u, batch)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(gx))
+    # fc leaves are Stiefel, conv leaves are not
+    assert prob.stiefel_mask == {"conv1": False, "conv2": False,
+                                 "fc1": True, "head": True}
+
+
+def test_dro_y_star_closed_form():
+    stream = ClassificationStream(n_nodes=2, batch_per_node=16)
+    params = fair.init_cnn(jax.random.PRNGKey(0), image_hw=stream.image_hw)
+    prob = fair.make_dro_problem(params)
+    batches = {k: jnp.asarray(v) for k, v in stream.batch(0).items()}
+    p_opt = prob.y_star(params, batches)
+
+    def g_val(p):
+        vals = jax.vmap(lambda b: prob.loss_fn(params, p, b))(batches)
+        return float(jnp.mean(vals))
+
+    v_star = g_val(p_opt)
+    for seed in range(5):
+        p_alt = project_simplex(
+            p_opt + 0.2 * jax.random.normal(jax.random.PRNGKey(seed),
+                                            p_opt.shape))
+        assert g_val(p_alt) <= v_star + 1e-4

@@ -1,0 +1,77 @@
+"""§Perf knob correctness: every optimization must be semantics-preserving
+(the hillclimb changes implementations, never Algorithm 1/2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ModelConfig, MoESpec
+from repro.models import moe, transformer as T
+from repro.objectives import lm
+
+
+def test_grouped_dispatch_exact_at_high_capacity():
+    cfg = ModelConfig(d_model=32, d_ff=64)
+    spec = MoESpec(n_experts=8, top_k=2, d_expert=64, n_shared=1,
+                   capacity_factor=4.0)
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+    y_ref, _ = moe.apply_moe(params, x, spec)
+    for g in (2, 4, -1):
+        y_g, _ = moe.apply_moe(
+            params, x, dataclasses.replace(spec, dispatch_groups=g))
+        np.testing.assert_allclose(y_g, y_ref, atol=1e-5), g
+
+
+def test_ce_impls_match_values_and_grads():
+    lg = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 33))
+    tg = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 33)
+
+    def loss(l, impl):
+        return lm.token_ce(l, tg, impl).sum()
+
+    v1, g1 = jax.value_and_grad(loss)(lg, "gather")
+    v2, g2 = jax.value_and_grad(loss)(lg, "dot")
+    np.testing.assert_allclose(v1, v2, atol=1e-5)
+    np.testing.assert_allclose(g1, g2, atol=1e-5)
+
+
+def test_vocab_padding_preserves_loss_semantics():
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "group_ids": jnp.zeros((2,), jnp.int32)}
+    y = jnp.full((cfg.n_groups,), 1.0 / cfg.n_groups)
+
+    cfg_pad = dataclasses.replace(cfg, vocab_pad_to=96)
+    assert cfg_pad.padded_vocab > cfg.vocab_size
+    params_pad = T.init_params(jax.random.PRNGKey(1), cfg_pad)
+    assert params_pad["lm_head"].shape[-1] == cfg_pad.padded_vocab
+
+    # build an unpadded model with identical weights (slice the pad rows)
+    params_ref = jax.tree.map(lambda x: x, params_pad)
+    params_ref["embed"] = params_pad["embed"][: cfg.vocab_size]
+    params_ref["lm_head"] = params_pad["lm_head"][:, : cfg.vocab_size]
+
+    l_pad = lm.lm_minimax_loss(params_pad, y, batch, cfg_pad)
+    l_ref = lm.lm_minimax_loss(params_ref, y, batch, cfg)
+    np.testing.assert_allclose(l_pad, l_ref, atol=1e-5)
+    # both CE impls agree on the padded model
+    l_dot = lm.lm_minimax_loss(
+        params_pad, y, batch, dataclasses.replace(cfg_pad, ce_impl="dot"))
+    np.testing.assert_allclose(l_pad, l_dot, atol=1e-5)
+
+
+def test_unrolled_stages_match_scan():
+    cfg = configs.get_config("granite-3-8b", smoke=True)
+    cfg4 = dataclasses.replace(
+        cfg, stages=(dataclasses.replace(cfg.stages[0], repeat=4),))
+    params = T.init_params(jax.random.PRNGKey(0), cfg4)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    l_scan, _, _ = T.forward(params, cfg4, toks)
+    l_unroll, _, _ = T.forward(
+        params, dataclasses.replace(cfg4, use_scan=False), toks)
+    np.testing.assert_allclose(l_scan, l_unroll, atol=2e-5)
