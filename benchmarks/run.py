@@ -7,6 +7,8 @@ payloads to experiments/bench/.
   fair_stoch  — Fig. 2: DRSGDA vs GNSD-A / DM-HSGD / GT-SRVR
   dro         — supplementary: DRO with orthonormal weights (Eq. 21)
   consensus   — W^k contraction vs lambda_2^k theory; Stiefel consensus
+  comms       — bits-per-parameter vs consensus error vs final M_t sweep
+                (EF-int8 / top-k / low-rank / naive; channel fault rates)
   complexity  — Theorem-1 decay-rate sanity (log-log slope of M_t)
   roofline    — dry-run roofline table summary (reads experiments/dryrun)
 """
@@ -17,8 +19,14 @@ import os
 import sys
 import time
 
-BENCH_DIR = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "experiments", "bench")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# make `python benchmarks/run.py ...` work from anywhere: the repo root (for
+# the `benchmarks` package) and src/ (for `repro`) must be importable
+for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+BENCH_DIR = os.path.join(_REPO_ROOT, "experiments", "bench")
 
 
 def _save(name: str, payload: dict) -> None:
@@ -81,6 +89,21 @@ def bench_consensus():
          f"lambda2k_bound_holds={ok}/{len(res['contraction'])}")
 
 
+def bench_comms():
+    from benchmarks import comms
+    res = comms.run()
+    _save("comms", res)
+    n_rows = len(res["gossip_sweep"]) + len(res["channel_rates"]) + \
+        len(res["fair_classification"])
+    fair = {r["variant"]: r["final_M_t"] for r in res["fair_classification"]}
+    derived = (f"int8_ef_err_ratio={res['int8_ef_err_ratio']:.2f};"
+               f"int8_ef_bits_ratio={res['int8_ef_bits_ratio']:.1f};"
+               f"acceptance_2x_err_4x_bits={res['acceptance_2x_err_4x_bits']};"
+               f"ef_beats_naive={res['ef_beats_naive']};"
+               + ";".join(f"{k}_Mt={v:.4f}" for k, v in fair.items()))
+    return res["us_total"] / max(n_rows, 1), derived
+
+
 def bench_complexity():
     from benchmarks import complexity
     res = complexity.run(steps=300)
@@ -106,6 +129,7 @@ ALL = {
     "fair_stoch": bench_fair_stoch,
     "dro": bench_dro,
     "consensus": bench_consensus,
+    "comms": bench_comms,
     "complexity": bench_complexity,
     "roofline": bench_roofline,
 }

@@ -1,0 +1,14 @@
+"""Communication subsystem: compression, error feedback, channel faults.
+
+Everything between the optimizer and the wire — see :mod:`repro.comms.layer`
+for the CHOCO-style engine, :mod:`repro.comms.compress` for the operators,
+and :mod:`repro.comms.channel` for the fault/topology-schedule model.
+"""
+from repro.comms.channel import ChannelModel  # noqa: F401
+from repro.comms.compress import (Compressor, IdentityCompressor,  # noqa: F401
+                                  Int8Stochastic, LowRank, TopK,
+                                  make_compressor, tree_bits,
+                                  tree_param_count)
+from repro.comms.layer import (CommEngine, CommState, make_mixer,  # noqa: F401
+                               maybe_engine, maybe_init_state)
+from repro.comms.spec import CommSpec  # noqa: F401

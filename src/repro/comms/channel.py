@@ -1,0 +1,188 @@
+"""Fault / time-variation model for one gossip hop.
+
+The optimizer sees a fixed ``GossipSpec`` matrix ``W``; real networks do not
+cooperate.  ``ChannelModel`` turns one hop into a *sequence* of effective
+matrices ``W_t`` built from ``W`` by
+
+* **link drops** — each active edge fails i.i.d. with ``drop_rate``;
+* **straggler skips** — each node sits a round out with ``straggler_rate``
+  (it neither sends nor receives: all incident edges drop);
+* **schedules** — ``round_robin`` cycles the color classes of a greedy
+  proper edge coloring (ring, even n: the classic even/odd matchings);
+  ``matching`` samples one class uniformly per round.
+
+Dropped weight folds back into the diagonal, so every ``W_t`` is symmetric
+doubly stochastic and gossip remains mean-preserving; only the *rate* of
+consensus degrades.  ``empirical_mixing_rate`` measures that rate so the
+consensus benchmark can put it next to the static-``W`` ``lambda_2``.
+
+With a clean channel (no drops, no stragglers, static schedule) the hop
+delegates to the exact path — ``mix_ring`` for rings — and is bit-identical
+to uncompressed gossip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.spec import CommSpec
+
+# NOTE: repro.core.gossip is imported lazily inside methods.  The comms
+# package must stay import-independent of repro.core so that either package
+# can be the entry point (core.gda imports repro.comms.layer at module scope;
+# a module-level import here would close the cycle through the package
+# __init__s).
+
+Array = jax.Array
+PyTree = Any
+
+
+def _edge_color_classes(w: np.ndarray) -> list[np.ndarray]:
+    """Greedy proper edge coloring; returns per-color symmetric 0/1 masks.
+    Each class is a matching (no node appears twice), so the ``matching``
+    schedule can sample classes directly."""
+    n = w.shape[0]
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if w[i, j] > 0]
+    colors: list[list[tuple[int, int]]] = []
+    busy: list[set[int]] = []
+    for i, j in edges:
+        for c, nodes in enumerate(busy):
+            if i not in nodes and j not in nodes:
+                colors[c].append((i, j))
+                nodes.update((i, j))
+                break
+        else:
+            colors.append([(i, j)])
+            busy.append({i, j})
+    masks = []
+    for cls in colors:
+        m = np.zeros((n, n), np.float32)
+        for i, j in cls:
+            m[i, j] = m[j, i] = 1.0
+        masks.append(m)
+    return masks
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ChannelModel:
+    """Seeded fault simulation over a base doubly-stochastic ``w``."""
+
+    w: np.ndarray                  # base mixing matrix (n, n), numpy/static
+    drop_rate: float = 0.0
+    straggler_rate: float = 0.0
+    schedule: str = "static"       # static | round_robin | matching
+    topology: str = "ring"         # exact-path delegation hint
+    self_weight: float = 1.0 / 3.0
+
+    def __post_init__(self):
+        if self.schedule == "static":
+            masks = [(np.asarray(self.w) > 0).astype(np.float32)
+                     * (1.0 - np.eye(self.w.shape[0], dtype=np.float32))]
+        else:
+            masks = _edge_color_classes(np.asarray(self.w))
+        if not masks:  # edgeless graph (n == 1): W_t degenerates to identity
+            masks = [np.zeros_like(np.asarray(self.w, np.float32))]
+        object.__setattr__(self, "_subset_masks", np.stack(masks))
+
+    @classmethod
+    def for_gossip(cls, gossip, comm: CommSpec) -> "ChannelModel":
+        return cls(w=gossip.matrix, drop_rate=comm.drop_rate,
+                   straggler_rate=comm.straggler_rate, schedule=comm.schedule,
+                   topology=gossip.topology, self_weight=gossip.self_weight)
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def n_subsets(self) -> int:
+        return self._subset_masks.shape[0]
+
+    @property
+    def trivial(self) -> bool:
+        return (self.drop_rate == 0.0 and self.straggler_rate == 0.0
+                and self.schedule == "static")
+
+    @property
+    def lam2(self) -> float:
+        from repro.core.gossip import second_largest_eigenvalue
+        return second_largest_eigenvalue(np.asarray(self.w))
+
+    # -- per-round effective matrix ----------------------------------------
+
+    def w_t(self, rnd: Array | int, key: Array) -> Array:
+        """Effective mixing matrix for round ``rnd`` (jit-safe, ``rnd`` may
+        be traced).  Always symmetric doubly stochastic."""
+        n = self.n
+        w = jnp.asarray(self.w, jnp.float32)
+        off = w * (1.0 - jnp.eye(n, dtype=jnp.float32))
+        masks = jnp.asarray(self._subset_masks)
+        if self.schedule == "round_robin":
+            mask = jnp.take(masks, jnp.mod(rnd, self.n_subsets), axis=0)
+        elif self.schedule == "matching":
+            k_sched, key = jax.random.split(key)
+            mask = jnp.take(masks, jax.random.randint(
+                k_sched, (), 0, self.n_subsets), axis=0)
+        else:
+            mask = masks[0]
+        if self.drop_rate > 0.0:
+            k_drop, key = jax.random.split(key)
+            keep = jax.random.bernoulli(
+                k_drop, 1.0 - self.drop_rate, (n, n)).astype(jnp.float32)
+            keep = jnp.triu(keep, 1)
+            mask = mask * (keep + keep.T)
+        if self.straggler_rate > 0.0:
+            k_straggle, key = jax.random.split(key)
+            up = jax.random.bernoulli(
+                k_straggle, 1.0 - self.straggler_rate, (n,)).astype(jnp.float32)
+            mask = mask * (up[:, None] * up[None, :])
+        w_off = off * mask
+        return w_off + jnp.diag(1.0 - jnp.sum(w_off, axis=1))
+
+    # -- mixing -------------------------------------------------------------
+
+    def mix_hop(self, tree: PyTree, rnd: Array | int, key: Array) -> PyTree:
+        """One gossip hop through the channel.  A trivial channel takes the
+        exact path (``mix_ring`` for rings) and is bit-identical to it."""
+        if self.trivial:
+            if self.topology == "ring":
+                from repro.core.gossip import mix_ring
+                return mix_ring(tree, steps=1, self_weight=self.self_weight)
+            w = jnp.asarray(self.w, jnp.float32)
+            return jax.tree.map(
+                lambda x: jnp.einsum("ij,j...->i...", w.astype(x.dtype), x),
+                tree)
+        wt = self.w_t(rnd, key)
+        return jax.tree.map(
+            lambda x: jnp.einsum("ij,j...->i...", wt.astype(x.dtype), x), tree)
+
+    def mix(self, tree: PyTree, rnd: Array | int, key: Array,
+            steps: int = 1) -> PyTree:
+        for h in range(steps):
+            tree = self.mix_hop(tree, rnd * steps + h,
+                                jax.random.fold_in(key, h))
+        return tree
+
+    # -- diagnostics --------------------------------------------------------
+
+    def empirical_mixing_rate(self, rounds: int = 64, seed: int = 0,
+                              dim: int = 32) -> dict:
+        """Per-round disagreement contraction under the sampled W_t sequence,
+        to compare against the static-W ``lambda_2``."""
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(jax.random.fold_in(key, 0xA11CE), (self.n, dim))
+        err0 = float(jnp.linalg.norm(x - jnp.mean(x, 0, keepdims=True)))
+        errs = []
+        for t in range(rounds):
+            x = self.mix_hop(x, t, jax.random.fold_in(key, t))
+            errs.append(float(jnp.linalg.norm(
+                x - jnp.mean(x, 0, keepdims=True))))
+        rate = (errs[-1] / err0) ** (1.0 / rounds) if err0 > 0 else 0.0
+        return {"per_round_rate": rate, "lambda2_static": self.lam2,
+                "final_over_initial": errs[-1] / max(err0, 1e-30)}

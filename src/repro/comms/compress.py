@@ -1,0 +1,188 @@
+"""Compression operators for gossip payloads.
+
+Every compressor maps a node-stacked leaf ``x`` (axis 0 = node) to the
+reconstruction its receivers would decode, plus a *static* account of the
+bits that crossed the wire.  Keeping the bit accounting static (pure Python
+over shapes) means the benchmark's bits-per-parameter sweep costs nothing
+inside jit.
+
+Operators:
+
+* ``identity``  — lossless, 32 bits/entry baseline.
+* ``int8``      — per-node max-abs scale + unbiased stochastic rounding to
+  int8 (the payload the ``quant_mix`` Pallas kernel consumes).
+* ``topk``      — per-node magnitude top-k sparsification (value + index).
+* ``lowrank``   — randomized rank-p sketch ``Q (Q^T A)`` for matrix leaves
+  (the Stiefel parameters); non-matrix leaves pass through.
+
+All of these except ``identity`` are biased and/or noisy; the CHOCO-style
+error-feedback memory in :mod:`repro.comms.layer` is what makes gossip with
+them still contract to consensus.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.comms.spec import CommSpec
+
+Array = jax.Array
+PyTree = Any
+
+_FLOAT_BITS = 32
+_INDEX_BITS = 32
+_EPS = 1e-12
+
+
+class Compressor:
+    """Base: lossless pass-through (the full-precision wire)."""
+
+    name = "identity"
+
+    def __call__(self, key: Array, x: Array) -> Array:
+        del key
+        return x
+
+    def bits(self, shape: tuple[int, ...]) -> float:
+        size = 1
+        for s in shape:
+            size *= s
+        return float(size * _FLOAT_BITS)
+
+
+IdentityCompressor = Compressor
+
+
+def _per_node_scale(x: Array) -> Array:
+    """max-abs over everything but the node axis, shaped to broadcast."""
+    axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True) if axes else jnp.abs(x)
+    return jnp.maximum(amax / 127.0, _EPS).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Stochastic(Compressor):
+    """Unbiased stochastic int8: q = floor(x/scale + U[0,1)), per-node scale."""
+
+    name = "int8"
+
+    def quantize(self, key: Array, x: Array) -> tuple[Array, Array]:
+        scale = _per_node_scale(x)
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        q = jnp.floor(x.astype(jnp.float32) / scale + u)
+        return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+    def dequantize(self, q: Array, scale: Array, dtype) -> Array:
+        return (q.astype(jnp.float32) * scale).astype(dtype)
+
+    def __call__(self, key: Array, x: Array) -> Array:
+        q, scale = self.quantize(key, x)
+        return self.dequantize(q, scale, x.dtype)
+
+    def bits(self, shape: tuple[int, ...]) -> float:
+        size = 1
+        for s in shape:
+            size *= s
+        return float(size * 8 + shape[0] * _FLOAT_BITS)  # payload + scales
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Keep the largest-magnitude ``frac`` of entries per node, zero the rest."""
+
+    frac: float = 0.05
+    name = "topk"
+
+    def _k(self, shape: tuple[int, ...]) -> int:
+        size = 1
+        for s in shape[1:]:
+            size *= s
+        return max(1, int(round(self.frac * size)))
+
+    def __call__(self, key: Array, x: Array) -> Array:
+        del key
+        k = self._k(x.shape)
+
+        def one(row: Array) -> Array:
+            flat = row.reshape(-1)
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(row.shape)
+
+        return jax.vmap(one)(x)
+
+    def bits(self, shape: tuple[int, ...]) -> float:
+        return float(shape[0] * self._k(shape) * (_FLOAT_BITS + _INDEX_BITS))
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRank(Compressor):
+    """Randomized rank-p sketch per node for matrix leaves (ndim >= 3):
+    Y = A Omega, Q = qr(Y), reconstruction Q (Q^T A).  Transmits Q and
+    Q^T A, i.e. p(d + r) floats instead of d*r."""
+
+    rank: int = 4
+    name = "lowrank"
+
+    def _eligible(self, shape: tuple[int, ...]) -> bool:
+        return len(shape) >= 3 and min(shape[-2], shape[-1]) > self.rank
+
+    def __call__(self, key: Array, x: Array) -> Array:
+        if not self._eligible(x.shape):
+            return x
+        d, r = x.shape[-2], x.shape[-1]
+        omega = jax.random.normal(key, (r, self.rank), jnp.float32)
+
+        def one(a: Array) -> Array:
+            af = a.reshape(-1, d, r).astype(jnp.float32)
+            y = jnp.einsum("bdr,rp->bdp", af, omega)
+            q, _ = jnp.linalg.qr(y)
+            rec = jnp.einsum("bdp,bpr->bdr", q,
+                             jnp.einsum("bdp,bdr->bpr", q, af))
+            return rec.reshape(a.shape).astype(a.dtype)
+
+        return jax.vmap(one)(x)
+
+    def bits(self, shape: tuple[int, ...]) -> float:
+        if not self._eligible(shape):
+            return Compressor.bits(self, shape)
+        lead = 1
+        for s in shape[:-2]:
+            lead *= s
+        return float(lead * self.rank * (shape[-2] + shape[-1]) * _FLOAT_BITS)
+
+
+def make_compressor(comm: CommSpec) -> Compressor:
+    if comm.compressor == "none":
+        return IdentityCompressor()
+    if comm.compressor == "int8":
+        return Int8Stochastic()
+    if comm.compressor == "topk":
+        return TopK(frac=comm.topk_frac)
+    if comm.compressor == "lowrank":
+        return LowRank(rank=comm.rank)
+    raise ValueError(f"unknown compressor {comm.compressor!r}")
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+
+def compress_tree(comp: Compressor, key: Array, tree: PyTree) -> PyTree:
+    """Apply ``comp`` leaf-wise with decorrelated per-leaf keys."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
+    return jax.tree.unflatten(
+        treedef, [comp(k, l) for k, l in zip(keys, leaves)])
+
+
+def tree_bits(comp: Compressor, tree: PyTree) -> float:
+    """Total bits one gossip transmission of ``tree`` puts on the wire."""
+    return sum(comp.bits(tuple(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def tree_param_count(tree: PyTree) -> int:
+    return sum(int(l.size) for l in jax.tree.leaves(tree))

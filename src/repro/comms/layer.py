@@ -1,0 +1,208 @@
+"""The comms engine: compressed, fault-tolerant gossip with error feedback.
+
+``CommEngine`` owns everything between an optimizer's ``mix`` call and the
+wire.  One compressed gossip round for a slot (``x``/``y``/``u``/``v``) is
+the CHOCO scheme:
+
+    q_i      = C(x_i - x_hat_i)          # the only thing transmitted
+    x_hat_i += q_i                       # every replica folds the payload
+    x_i     += gamma * ([W_t^s x_hat]_i - x_hat_i)
+
+With the identity compressor and ``gamma = 1`` this reduces exactly to
+``x <- W^s x``; with a contractive/unbiased compressor the hat memory keeps
+the *error feedback* residual in the loop so consensus error still goes to
+zero (naive quantized gossip — ``error_feedback=False`` — plateaus at the
+compressor's noise floor instead).
+
+The hop itself runs through :class:`repro.comms.channel.ChannelModel`
+(drops / stragglers / schedules); a trivial channel takes the exact
+``mix_ring`` path.  For int8 payloads on a clean ring the first hop is the
+fused Pallas ``quant_mix`` kernel: ``W(hat + dq(q)) = W hat + [dequantize +
+3-way combine of the int8 wire buffers]``.
+
+Optimizers thread one :class:`CommState` pytree leaf through their jitted
+step; :func:`make_mixer` packages the slot-keyed routing so the four
+baselines and DRGDA/DRSGDA share the integration shim.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comms.channel import ChannelModel
+from repro.comms.compress import (Int8Stochastic, compress_tree,
+                                  make_compressor, tree_bits,
+                                  tree_param_count)
+from repro.comms.spec import CommSpec
+
+Array = jax.Array
+PyTree = Any
+
+
+class CommState(NamedTuple):
+    """Per-node communication memory, carried as one optimizer-state leaf."""
+    hats: dict[str, PyTree]   # CHOCO public copies, one per mixed slot
+    key: Array                # base PRNG for quantization + channel faults
+
+
+def _salt(slot: str) -> int:
+    return zlib.crc32(slot.encode()) & 0x7FFFFFFF
+
+
+class CommEngine:
+    """Static compression + channel machinery for one ``GossipSpec``."""
+
+    def __init__(self, gossip):
+        comm: Optional[CommSpec] = gossip.comm
+        assert comm is not None and comm.enabled, \
+            "CommEngine requires an enabled GossipSpec.comm"
+        self.gossip = gossip
+        self.comm = comm
+        self.compressor = make_compressor(comm)
+        self.channel = ChannelModel.for_gossip(gossip, comm)
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, slots: dict[str, PyTree]) -> CommState:
+        # channel-only configs never read the CHOCO memory — don't carry
+        # model-sized dead buffers through every donated optimizer step
+        hats = ({name: jax.tree.map(jnp.zeros_like, tree)
+                 for name, tree in slots.items()}
+                if self.comm.compressed else {})
+        return CommState(hats=hats, key=jax.random.PRNGKey(self.comm.seed))
+
+    # -- accounting (static, pure Python over shapes) -----------------------
+
+    def bits_per_mix(self, tree: PyTree) -> float:
+        return tree_bits(self.compressor, tree)
+
+    def bits_per_param(self, tree: PyTree) -> float:
+        return tree_bits(self.compressor, tree) / max(tree_param_count(tree), 1)
+
+    # -- one compressed gossip round ---------------------------------------
+
+    def mix(self, state: CommState, slot: str, tree: PyTree, *,
+            steps: Optional[int] = None, rnd: Array | int = 0
+            ) -> tuple[PyTree, CommState]:
+        s = self.gossip.k if steps is None else steps
+        if self.gossip.n_nodes == 1 or s == 0:
+            return tree, state
+        key = jax.random.fold_in(
+            jax.random.fold_in(state.key, _salt(slot)), rnd)
+        k_quant, k_chan = jax.random.split(key)
+
+        if not self.comm.compressed:
+            # channel-only: full-precision payload over the faulty links
+            return self.channel.mix(tree, rnd, k_chan, steps=s), state
+
+        hat = state.hats[slot]
+        source = (jax.tree.map(lambda x, h: x - h, tree, hat)
+                  if self.comm.error_feedback else tree)
+        payload, wire = self._compress(k_quant, source)
+        hat_new = (jax.tree.map(lambda h, p: h + p, hat, payload)
+                   if self.comm.error_feedback else payload)
+        mixed_hat = self._gossip_hats(hat_new, hat, wire, s, rnd, k_chan)
+        gamma = self.comm.gamma
+        mixed = jax.tree.map(lambda x, mh, h: x + gamma * (mh - h),
+                             tree, mixed_hat, hat_new)
+        new_hats = dict(state.hats)
+        new_hats[slot] = hat_new
+        return mixed, CommState(hats=new_hats, key=state.key)
+
+    # -- internals ----------------------------------------------------------
+
+    def _compress(self, key: Array, tree: PyTree):
+        """Leaf-wise compression; for int8 also returns the raw wire buffers
+        (q, scale) so the fused kernel can consume them."""
+        comp = self.compressor
+        if isinstance(comp, Int8Stochastic):
+            # same per-leaf key decorrelation as compress_tree, but keeping
+            # the int8 payloads around for the fused quant_mix hop
+            leaves, treedef = jax.tree.flatten(tree)
+            keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
+            qs, scales = zip(*(comp.quantize(k, l)
+                               for k, l in zip(keys, leaves)))
+            payload = jax.tree.unflatten(
+                treedef, [comp.dequantize(q, sc, l.dtype)
+                          for q, sc, l in zip(qs, scales, leaves)])
+            return payload, (list(qs), list(scales), treedef)
+        return compress_tree(comp, key, tree), None
+
+    def _use_fused_hop(self) -> bool:
+        return (self.comm.fuse_kernel and self.channel.trivial
+                and self.gossip.topology == "ring"
+                and isinstance(self.compressor, Int8Stochastic))
+
+    def _gossip_hats(self, hat_new: PyTree, hat_old: PyTree, wire,
+                     s: int, rnd, k_chan: Array) -> PyTree:
+        if wire is not None and self._use_fused_hop():
+            from repro.core.gossip import mix_ring  # cycle-safe at call time
+            from repro.kernels import ops
+            qs, scales, treedef = wire
+            sw = self.gossip.self_weight
+            ws = (1.0 - sw) / 2.0
+            base = mix_ring(hat_old, steps=1, self_weight=sw) \
+                if self.comm.error_feedback else None
+
+            def hop(q: Array, scale: Array, like: Array) -> Array:
+                n = q.shape[0]
+                q2 = q.reshape(n, -1)
+                sc = scale.reshape(n, 1)
+                out = ops.quant_mix(
+                    q2, jnp.roll(q2, 1, 0), jnp.roll(q2, -1, 0),
+                    sc, jnp.roll(sc, 1, 0), jnp.roll(sc, -1, 0),
+                    w_self=sw, w_side=ws, out_dtype=like.dtype)
+                return out.reshape(like.shape)
+
+            leaves_old = jax.tree.leaves(hat_old)
+            wire_mix = jax.tree.unflatten(
+                treedef, [hop(q, sc, l)
+                          for q, sc, l in zip(qs, scales, leaves_old)])
+            first = (jax.tree.map(lambda b, w: b + w, base, wire_mix)
+                     if base is not None else wire_mix)
+            return mix_ring(first, steps=s - 1, self_weight=sw) \
+                if s > 1 else first
+        return self.channel.mix(hat_new, rnd, k_chan, steps=s)
+
+
+# ---------------------------------------------------------------------------
+# optimizer shims
+# ---------------------------------------------------------------------------
+
+
+def maybe_engine(gossip) -> Optional[CommEngine]:
+    comm = getattr(gossip, "comm", None)
+    if comm is not None and comm.enabled:
+        return CommEngine(gossip)
+    return None
+
+
+def maybe_init_state(engine: Optional[CommEngine],
+                     slots: dict[str, PyTree]) -> Optional[CommState]:
+    return engine.init_state(slots) if engine is not None else None
+
+
+def make_mixer(gossip, engine: Optional[CommEngine],
+               comm_state: Optional[CommState], rnd: Array | int
+               ) -> tuple[Callable[[str, PyTree, int], PyTree],
+                          Callable[[], Optional[CommState]]]:
+    """Slot-keyed mix router for one optimizer step.
+
+    Returns ``(mix, finalize)``: ``mix(slot, tree, steps)`` routes through
+    the comms engine when one is configured (threading the CommState) and
+    through the exact ``gossip.mix`` otherwise; ``finalize()`` yields the
+    CommState to store in the next optimizer state.
+    """
+    box = {"cs": comm_state}
+
+    def mix(slot: str, tree: PyTree, steps: int) -> PyTree:
+        if engine is None:
+            return gossip.mix(tree, steps=steps)
+        out, box["cs"] = engine.mix(box["cs"], slot, tree,
+                                    steps=steps, rnd=rnd)
+        return out
+
+    return mix, lambda: box["cs"]

@@ -1,0 +1,57 @@
+"""Static description of the communication layer (compression + channel).
+
+Kept free of jax/core imports so ``core.gossip`` (and the pure-dataclass
+config schema) can reference it without an import cycle: ``CommSpec`` is the
+value carried by ``GossipSpec.comm`` and by the ``comm_*`` knobs on
+``ModelConfig``.  All runtime machinery lives in :mod:`repro.comms.compress`,
+:mod:`repro.comms.channel` and :mod:`repro.comms.layer`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+CompressorKind = Literal["none", "int8", "topk", "lowrank"]
+Schedule = Literal["static", "round_robin", "matching"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Everything between the optimizer and the wire, as static config.
+
+    Compression (CHOCO-style): each node keeps a public copy ``x_hat`` of its
+    state; one gossip round transmits ``C(x - x_hat)``, every replica folds
+    the payload into its hats, and consensus steps on the hats with step size
+    ``gamma``.  ``error_feedback=False`` drops the memory (naive quantized
+    gossip — plateaus at the compressor's noise floor, kept for ablation).
+
+    Channel: one gossip hop may be perturbed by seeded i.i.d. link drops,
+    straggler skips (a straggling node neither sends nor receives), and a
+    time-varying edge schedule.  Dropped weight folds back into the diagonal
+    so every effective ``W_t`` stays symmetric doubly stochastic.
+    """
+    # --- compression -------------------------------------------------------
+    compressor: CompressorKind = "none"
+    topk_frac: float = 0.05        # fraction of entries kept per node (topk)
+    rank: int = 4                  # retained rank per matrix leaf (lowrank)
+    error_feedback: bool = True    # CHOCO memory on/off
+    gamma: float = 0.9             # consensus step size on the hats
+    fuse_kernel: bool = True       # int8 ring hop through the quant_mix kernel
+    # --- channel -----------------------------------------------------------
+    drop_rate: float = 0.0         # per-edge i.i.d. Bernoulli drop probability
+    straggler_rate: float = 0.0    # per-node i.i.d. skip probability
+    schedule: Schedule = "static"  # edge activation schedule per round
+    seed: int = 0                  # base PRNG seed for quantization + channel
+
+    @property
+    def compressed(self) -> bool:
+        return self.compressor != "none"
+
+    @property
+    def channel_active(self) -> bool:
+        return (self.drop_rate > 0.0 or self.straggler_rate > 0.0
+                or self.schedule != "static")
+
+    @property
+    def enabled(self) -> bool:
+        return self.compressed or self.channel_active

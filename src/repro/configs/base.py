@@ -156,6 +156,33 @@ class ModelConfig:
     # full-logits all-reduce disappears (Megatron-style vocab padding).
     # 0 = no padding.  Loss masks the padded logits.
     vocab_pad_to: int = 0
+    # --- communication layer knobs (repro.comms) ---------------------------
+    # Compression of gossip payloads: "none" | "int8" | "topk" | "lowrank".
+    comm_compressor: str = "none"
+    comm_topk_frac: float = 0.05       # kept fraction per node (topk)
+    comm_rank: int = 4                 # retained rank per matrix leaf (lowrank)
+    comm_gamma: float = 0.9            # CHOCO consensus step on the hats
+    comm_error_feedback: bool = True   # False => naive quantized gossip
+    # Channel faults / time-varying topology for each gossip hop.
+    comm_drop_rate: float = 0.0
+    comm_straggler_rate: float = 0.0
+    comm_schedule: str = "static"      # static | round_robin | matching
+
+    def comm_spec(self):
+        """repro.comms.CommSpec from the comm_* knobs, or None when the
+        communication layer is a no-op (exact, lossless gossip)."""
+        if (self.comm_compressor == "none" and self.comm_drop_rate == 0.0
+                and self.comm_straggler_rate == 0.0
+                and self.comm_schedule == "static"):
+            return None
+        from repro.comms.spec import CommSpec  # lazy: keep schema jax-free
+        return CommSpec(compressor=self.comm_compressor,
+                        topk_frac=self.comm_topk_frac, rank=self.comm_rank,
+                        gamma=self.comm_gamma,
+                        error_feedback=self.comm_error_feedback,
+                        drop_rate=self.comm_drop_rate,
+                        straggler_rate=self.comm_straggler_rate,
+                        schedule=self.comm_schedule)
 
     @property
     def padded_vocab(self) -> int:

@@ -27,6 +27,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comms import layer as comms_layer
 from repro.core import manifolds
 from repro.core.gda import (GDAHyper, StepMetrics, _consensus, _copy_tree,
                             _tree_consensus, _tree_mean_norm,
@@ -75,6 +76,7 @@ class GTState(NamedTuple):
     gx_prev: PyTree
     gy_prev: Array
     step: Array
+    comm: Any = None
 
 
 class GTGDA:
@@ -89,25 +91,31 @@ class GTGDA:
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
                  hyper: GDAHyper = GDAHyper()):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
+        self.engine = comms_layer.maybe_engine(gossip)
 
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> GTState:
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, batch0)
+        comm0 = comms_layer.maybe_init_state(
+            self.engine, {"x": x0, "y": y0, "u": gx, "v": gy})
         return GTState(x0, y0, gx, gy, _copy_tree(gx), jnp.copy(gy),
-                       jnp.zeros((), jnp.int32))
+                       jnp.zeros((), jnp.int32), comm0)
 
     def step(self, state: GTState, batch: Any) -> tuple[GTState, StepMetrics]:
-        h, mix = self.hyper, self.gossip.mix
+        h = self.hyper
+        mix, comm_final = comms_layer.make_mixer(
+            self.gossip, self.engine, state.comm, state.step)
         x_new = jax.tree.map(lambda mx, u: mx - h.beta * u,
-                             mix(state.x, steps=1), state.u)
+                             mix("x", state.x, 1), state.u)
         x_new = _project_back(self.problem.stiefel_mask, x_new, h.invsqrt)
         y_new = jax.vmap(self.problem.project_y)(
-            mix(state.y, steps=1) + h.eta * state.v)
+            mix("y", state.y, 1) + h.eta * state.v)
 
         loss, (gx, gy) = _euclid_grads(self.problem, x_new, y_new, batch)
         u_new = jax.tree.map(lambda mu, g, gp: mu + g - gp,
-                             mix(state.u, steps=1), gx, state.gx_prev)
-        v_new = mix(state.v, steps=1) + gy - state.gy_prev
-        new = GTState(x_new, y_new, u_new, v_new, gx, gy, state.step + 1)
+                             mix("u", state.u, 1), gx, state.gx_prev)
+        v_new = mix("v", state.v, 1) + gy - state.gy_prev
+        new = GTState(x_new, y_new, u_new, v_new, gx, gy, state.step + 1,
+                      comm_final())
         return new, _metrics(loss, gx, gy, x_new, y_new, u_new)
 
     def make_step(self, donate: bool = True):
@@ -133,6 +141,7 @@ class HSGDState(NamedTuple):
     dx: PyTree     # STORM estimator for grad_x
     dy: Array
     step: Array
+    comm: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,30 +165,36 @@ class DMHSGD:
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
                  hyper: HSGDHyper = HSGDHyper()):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
+        self.engine = comms_layer.maybe_engine(gossip)
 
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> HSGDState:
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, batch0)
+        comm0 = comms_layer.maybe_init_state(
+            self.engine, {"x": x0, "y": y0, "u": gx, "v": gy})
         return HSGDState(x0, y0, _copy_tree(x0), jnp.copy(y0), gx, gy,
-                         jnp.zeros((), jnp.int32))
+                         jnp.zeros((), jnp.int32), comm0)
 
     def step(self, state: HSGDState, batch: Any) -> tuple[HSGDState, StepMetrics]:
-        h, mix = self.hyper, self.gossip.mix
+        h = self.hyper
+        mix, comm_final = comms_layer.make_mixer(
+            self.gossip, self.engine, state.comm, state.step)
         loss, (gx_cur, gy_cur) = _euclid_grads(self.problem, state.x, state.y, batch)
         _, (gx_old, gy_old) = _euclid_grads(self.problem, state.x_prev, state.y_prev, batch)
 
         dx = jax.tree.map(lambda g, go, d: g + (1.0 - h.bx) * (d - go),
                           gx_cur, gx_old, state.dx)
         dy = gy_cur + (1.0 - h.by) * (state.dy - gy_old)
-        dx = mix(dx, steps=1)
-        dy = mix(dy, steps=1)
+        dx = mix("u", dx, 1)
+        dy = mix("v", dy, 1)
 
         x_new = jax.tree.map(lambda mx, d: mx - h.beta * d,
-                             mix(state.x, steps=1), dx)
+                             mix("x", state.x, 1), dx)
         x_new = _project_back(self.problem.stiefel_mask, x_new, h.invsqrt)
         y_new = jax.vmap(self.problem.project_y)(
-            mix(state.y, steps=1) + h.eta * dy)
+            mix("y", state.y, 1) + h.eta * dy)
 
-        new = HSGDState(x_new, y_new, state.x, state.y, dx, dy, state.step + 1)
+        new = HSGDState(x_new, y_new, state.x, state.y, dx, dy, state.step + 1,
+                        comm_final())
         return new, _metrics(loss, gx_cur, gy_cur, x_new, y_new, dx)
 
     def make_step(self, donate: bool = True):
@@ -203,6 +218,7 @@ class SRVRState(NamedTuple):
     gx_est_prev: PyTree
     gy_est_prev: Array
     step: Array
+    comm: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,31 +242,36 @@ class GTSRVR:
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
                  hyper: SRVRHyper = SRVRHyper()):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
+        self.engine = comms_layer.maybe_engine(gossip)
 
     def init(self, x0: PyTree, y0: Array, anchor_batch: Any) -> SRVRState:
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, anchor_batch)
         cp = _copy_tree
+        comm0 = comms_layer.maybe_init_state(
+            self.engine, {"x": x0, "y": y0, "u": gx, "v": gy})
         return SRVRState(x0, y0, cp(x0), jnp.copy(y0), gx, gy,
                          cp(gx), jnp.copy(gy), cp(gx), jnp.copy(gy),
-                         jnp.zeros((), jnp.int32))
+                         jnp.zeros((), jnp.int32), comm0)
 
     def _update_params(self, state: SRVRState, gx_est, gy_est):
-        h, mix = self.hyper, self.gossip.mix
+        h = self.hyper
+        mix, comm_final = comms_layer.make_mixer(
+            self.gossip, self.engine, state.comm, state.step)
         u_new = jax.tree.map(lambda mu, g, gp: mu + g - gp,
-                             mix(state.u, steps=1), gx_est, state.gx_est_prev)
-        v_new = mix(state.v, steps=1) + gy_est - state.gy_est_prev
+                             mix("u", state.u, 1), gx_est, state.gx_est_prev)
+        v_new = mix("v", state.v, 1) + gy_est - state.gy_est_prev
         x_new = jax.tree.map(lambda mx, u: mx - h.beta * u,
-                             mix(state.x, steps=1), u_new)
+                             mix("x", state.x, 1), u_new)
         x_new = _project_back(self.problem.stiefel_mask, x_new, h.invsqrt)
         y_new = jax.vmap(self.problem.project_y)(
-            mix(state.y, steps=1) + h.eta * v_new)
-        return x_new, y_new, u_new, v_new
+            mix("y", state.y, 1) + h.eta * v_new)
+        return x_new, y_new, u_new, v_new, comm_final()
 
     def anchor_step(self, state: SRVRState, anchor_batch: Any):
         loss, (gx, gy) = _euclid_grads(self.problem, state.x, state.y, anchor_batch)
-        x_new, y_new, u_new, v_new = self._update_params(state, gx, gy)
+        x_new, y_new, u_new, v_new, comm = self._update_params(state, gx, gy)
         new = SRVRState(x_new, y_new, state.x, state.y, gx, gy, u_new, v_new,
-                        gx, gy, state.step + 1)
+                        gx, gy, state.step + 1, comm)
         return new, _metrics(loss, gx, gy, x_new, y_new, u_new)
 
     def step(self, state: SRVRState, batch: Any):
@@ -260,9 +281,10 @@ class GTSRVR:
         gx_est = jax.tree.map(lambda g, go, e: e + g - go,
                               gx_cur, gx_old, state.gx_est)
         gy_est = state.gy_est + gy_cur - gy_old
-        x_new, y_new, u_new, v_new = self._update_params(state, gx_est, gy_est)
+        x_new, y_new, u_new, v_new, comm = self._update_params(
+            state, gx_est, gy_est)
         new = SRVRState(x_new, y_new, state.x, state.y, gx_est, gy_est,
-                        u_new, v_new, gx_est, gy_est, state.step + 1)
+                        u_new, v_new, gx_est, gy_est, state.step + 1, comm)
         return new, _metrics(loss, gx_cur, gy_cur, x_new, y_new, u_new)
 
     def make_step(self, donate: bool = True):

@@ -38,6 +38,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comms import layer as comms_layer
 from repro.core import manifolds
 from repro.core.gossip import GossipSpec
 from repro.core.minimax import MinimaxProblem, apply_masked
@@ -65,6 +66,7 @@ class GDAState(NamedTuple):
     gx_prev: PyTree    # last Riemannian grad_x (per node, own batch)
     gy_prev: Array     # last grad_y
     step: Array        # scalar int32
+    comm: Any = None   # comms_layer.CommState when GossipSpec.comm is enabled
 
 
 class StepMetrics(NamedTuple):
@@ -89,6 +91,7 @@ class DecentralizedGDA:
         self.gossip = gossip
         self.hyper = hyper
         self.k = hyper.k_override if hyper.k_override is not None else gossip.k
+        self.engine = comms_layer.maybe_engine(gossip)
 
     # -- initialization -----------------------------------------------------
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> GDAState:
@@ -98,17 +101,20 @@ class DecentralizedGDA:
         DISTINCT buffers — the jitted step donates the whole state, and XLA
         rejects donating one buffer twice."""
         rgx, gy = jax.vmap(self.problem.rgrads)(x0, y0, batch0)
+        comm0 = comms_layer.maybe_init_state(
+            self.engine, {"x": x0, "y": y0, "u": rgx, "v": gy})
         return GDAState(x=x0, y=y0, u=rgx, v=gy,
                         gx_prev=_copy_tree(rgx), gy_prev=jnp.copy(gy),
-                        step=jnp.zeros((), jnp.int32))
+                        step=jnp.zeros((), jnp.int32), comm=comm0)
 
     # -- one step -----------------------------------------------------------
     def step(self, state: GDAState, batch: Any) -> tuple[GDAState, StepMetrics]:
         h, k = self.hyper, self.k
-        mix = self.gossip.mix
+        mix, comm_final = comms_layer.make_mixer(
+            self.gossip, self.engine, state.comm, state.step)
 
         # ---- step 4: Riemannian consensus + tracked descent on x ----------
-        mixed_x = mix(state.x, steps=k)
+        mixed_x = mix("x", state.x, k)
 
         def stiefel_update(args):
             x, mx, u = args
@@ -129,19 +135,19 @@ class DecentralizedGDA:
 
         # ---- step 5: Euclidean consensus + tracked ascent on y ------------
         y_new = jax.vmap(self.problem.project_y)(
-            mix(state.y, steps=k) + h.eta * state.v)
+            mix("y", state.y, k) + h.eta * state.v)
 
         # ---- steps 6/7: gradient tracking ----------------------------------
         (loss_new, (rgx_new, gy_new)) = _vmapped_loss_and_rgrads(
             self.problem, x_new, y_new, batch)
 
         u_new = jax.tree.map(lambda mu, g, gp: mu + g - gp,
-                             mix(state.u, steps=k), rgx_new, state.gx_prev)
-        v_new = mix(state.v, steps=1) + gy_new - state.gy_prev
+                             mix("u", state.u, k), rgx_new, state.gx_prev)
+        v_new = mix("v", state.v, 1) + gy_new - state.gy_prev
 
         new_state = GDAState(x=x_new, y=y_new, u=u_new, v=v_new,
                              gx_prev=rgx_new, gy_prev=gy_new,
-                             step=state.step + 1)
+                             step=state.step + 1, comm=comm_final())
         metrics = StepMetrics(
             loss=jnp.mean(loss_new),
             grad_norm_x=_tree_mean_norm(rgx_new),

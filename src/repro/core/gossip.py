@@ -43,7 +43,9 @@ def ring_matrix(n: int, self_weight: float | None = None) -> np.ndarray:
     if n == 1:
         return np.ones((1, 1))
     if n == 2:
-        return np.full((2, 2), 0.5)
+        # degenerate ring: one neighbour, both "sides" are the same node
+        wc = 0.5 if self_weight is None else self_weight
+        return np.array([[wc, 1.0 - wc], [1.0 - wc, wc]])
     w_side = (1.0 - (self_weight if self_weight is not None else 1.0 / 3.0)) / 2.0
     wc = self_weight if self_weight is not None else 1.0 / 3.0
     w = np.zeros((n, n))
@@ -147,9 +149,9 @@ def mix_ring(tree, steps: int = 1, self_weight: float = 1.0 / 3.0):
     def leaf(x):
         if x.shape[0] == 1:
             return x
-        if x.shape[0] == 2:  # ring of 2 == full averaging
+        if x.shape[0] == 2:  # degenerate ring: full side weight to the peer
             def body2(_, v):
-                return 0.5 * (v + jnp.roll(v, 1, axis=0))
+                return self_weight * v + (1.0 - self_weight) * jnp.roll(v, 1, axis=0)
             return jax.lax.fori_loop(0, steps, body2, x)
         def body(_, v):
             return _mix_leaf_ring(v, self_weight, ws)
@@ -164,6 +166,10 @@ class GossipSpec:
     n_nodes: int = 16
     k_steps: int | None = None      # None => Theorem-1 prescription
     self_weight: float = 1.0 / 3.0
+    # Optional repro.comms.CommSpec (typed loosely to keep core free of a
+    # comms import).  When set and enabled, the optimizers route mixing
+    # through repro.comms.layer.CommEngine instead of the exact paths below.
+    comm: object | None = None
 
     @property
     def matrix(self) -> np.ndarray:
@@ -188,12 +194,12 @@ class GossipSpec:
             return tree
         if self.topology == "ring":
             return mix_ring(tree, steps=s, self_weight=self.self_weight)
-        w = jnp.asarray(self.matrix, dtype=jnp.float32)
-        return jax.tree.map(
-            lambda x: _mix_leaf_dense(jnp.linalg.matrix_power(w, s).astype(x.dtype), x)
-            if s > 1 else _mix_leaf_dense(w.astype(x.dtype), x),
-            tree,
-        )
+        # W^s built ONCE per call (in float64 numpy, so it constant-folds
+        # under jit), not per leaf inside the tree map.
+        ws = jnp.asarray(np.linalg.matrix_power(self.matrix, s)
+                         if s > 1 else self.matrix, dtype=jnp.float32)
+        return jax.tree.map(lambda x: _mix_leaf_dense(ws.astype(x.dtype), x),
+                            tree)
 
     def mix_once(self, tree):
         return self.mix(tree, steps=1)

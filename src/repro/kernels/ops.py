@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import quant_mix as _qm
 from repro.kernels import ref
 from repro.kernels import ring_mix as _rm
 from repro.kernels import stiefel_project as _sp
@@ -157,3 +158,53 @@ def ring_mix(x_self: Array, x_left: Array, x_right: Array, *,
                             w_self=w_self, w_side=w_side, block_rows=block,
                             interpret=(impl == "pallas_interpret"))
     return out.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# fused dequantize + ring combine (compressed gossip hop)
+# ---------------------------------------------------------------------------
+
+
+def quant_mix(q_self: Array, q_left: Array, q_right: Array,
+              s_self: Array, s_left: Array, s_right: Array, *,
+              w_self: float, w_side: float, out_dtype=jnp.float32,
+              impl: str | None = None) -> Array:
+    """Combine three int8 payloads with per-row scales in one pass:
+    ``wc * dq(qc) + ws * (dq(ql) + dq(qr))``.
+
+    ``q_*``: int8, shape (rows, ...) — trailing dims are flattened.
+    ``s_*``: one f32 scale per row; any shape reshapeable to (rows, 1).
+    """
+    impl = impl or _default_impl()
+    rows = q_self.shape[0]
+    scales = [s.reshape(rows, 1) for s in (s_self, s_left, s_right)]
+    if impl == "ref":
+        out = ref.quant_mix_ref(
+            q_self.reshape(rows, -1), q_left.reshape(rows, -1),
+            q_right.reshape(rows, -1), *scales,
+            w_self=w_self, w_side=w_side, out_dtype=out_dtype)
+        return out.reshape(q_self.shape)
+
+    cols = q_self.size // rows
+    pad_c = (-cols) % 128
+    cols_p = cols + pad_c
+    # int8 min tile is (32, 128): pad rows up to the sublane boundary so the
+    # compiled kernel tiles cleanly (padded rows carry q=0 -> contribute 0)
+    pad_r = (-rows) % 32
+    rows_p = rows + pad_r
+
+    def flat(q):
+        qf = q.reshape(rows, -1)
+        return jnp.pad(qf, ((0, pad_r), (0, pad_c)))
+
+    scales = [jnp.pad(s, ((0, pad_r), (0, 0))) for s in scales]
+    block_c = cols_p
+    for cand in (_qm.DEFAULT_BLOCK_COLS, 1024, 512, 256, 128):
+        if cols_p % cand == 0:
+            block_c = cand
+            break
+    out = _qm.quant_mix_2d(flat(q_self), flat(q_left), flat(q_right), *scales,
+                           w_self=w_self, w_side=w_side, out_dtype=out_dtype,
+                           block_rows=32, block_cols=block_c,
+                           interpret=(impl == "pallas_interpret"))
+    return out[:rows, :cols].reshape(q_self.shape)

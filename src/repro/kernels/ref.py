@@ -143,3 +143,22 @@ def ring_mix_ref(x_self: Array, x_left: Array, x_right: Array,
                  w_self: float, w_side: float) -> Array:
     """One gossip hop's local combine: wc*x + ws*(left + right)."""
     return w_self * x_self + w_side * (x_left + x_right)
+
+
+# ---------------------------------------------------------------------------
+# fused dequantize + ring combine
+# ---------------------------------------------------------------------------
+
+
+def quant_mix_ref(q_self: Array, q_left: Array, q_right: Array,
+                  s_self: Array, s_left: Array, s_right: Array,
+                  w_self: float, w_side: float,
+                  out_dtype=jnp.float32) -> Array:
+    """Compressed gossip hop's combine on int8 payloads with per-row scales:
+    out = wc * dq(qc) + ws * (dq(ql) + dq(qr)), dq(q) = q * scale."""
+    def dq(q, s):
+        return q.astype(jnp.float32) * s.astype(jnp.float32)
+
+    return (w_self * dq(q_self, s_self)
+            + w_side * (dq(q_left, s_left) + dq(q_right, s_right))
+            ).astype(out_dtype)

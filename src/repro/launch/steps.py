@@ -33,7 +33,8 @@ def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
     template = jax.eval_shape(
         lambda k: T.init_params(k, cfg, dtype), jax.random.PRNGKey(0))
     problem = lm_obj.make_lm_problem(cfg, template)
-    gossip = GossipSpec(topology=topology, n_nodes=n_nodes, k_steps=1)
+    gossip = GossipSpec(topology=topology, n_nodes=n_nodes, k_steps=1,
+                        comm=cfg.comm_spec())
     hyper = hyper or GDAHyper(alpha=0.5, beta=0.02, eta=0.05)
     opt = OPTIMIZERS[optimizer](problem, gossip, hyper)
     return opt, problem

@@ -1,0 +1,294 @@
+"""Comms subsystem tests: compression + error feedback, channel, kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import (ChannelModel, CommEngine, CommSpec, Int8Stochastic,
+                         LowRank, TopK, make_compressor, tree_bits)
+from repro.core import gossip as G
+
+N = 12
+
+
+def _spec(comm=None, n=N):
+    return G.GossipSpec(topology="ring", n_nodes=n, k_steps=1, comm=comm)
+
+
+def _tree(n=N, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(key, (n, 32, 4)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (n, 128))}
+
+
+def _cons_err(tree):
+    return float(sum(jnp.sum((l - jnp.mean(l, 0, keepdims=True)) ** 2)
+                     for l in jax.tree.leaves(tree)))
+
+
+def _run_gossip(comm, rounds, tree0):
+    eng = CommEngine(_spec(comm))
+    step = jax.jit(lambda x, cs, t: eng.mix(cs, "x", x, steps=1, rnd=t))
+    x, cs = tree0, eng.init_state({"x": tree0})
+    for t in range(rounds):
+        x, cs = step(x, cs, t)
+    return _cons_err(x)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+
+def test_ef_int8_gossip_converges_naive_plateaus():
+    """CHOCO memory keeps compressed gossip contracting; without it the
+    iterates stall at the quantizer's noise floor."""
+    tree0 = _tree()
+    err0 = _cons_err(tree0)
+    ef = _run_gossip(CommSpec(compressor="int8", gamma=0.95), 200, tree0)
+    naive = _run_gossip(CommSpec(compressor="int8", gamma=0.95,
+                                 error_feedback=False), 200, tree0)
+    assert ef < 1e-4 * err0          # error -> 0
+    assert ef < 0.05 * naive         # EF decisively beats naive
+
+
+@pytest.mark.parametrize("comm", [
+    CommSpec(compressor="topk", topk_frac=0.2, gamma=0.4),
+    CommSpec(compressor="lowrank", rank=2, gamma=0.2),
+])
+def test_ef_sparse_lowrank_gossip_contracts(comm):
+    tree0 = _tree()
+    err = _run_gossip(comm, 120, tree0)
+    assert err < 0.2 * _cons_err(tree0)
+
+
+def test_identity_comm_matches_exact_gossip():
+    """Identity compressor + gamma=1 reduces the CHOCO round to W^s x."""
+    tree0 = _tree()
+    # identity compressor alone is disabled; force an engine via a channel
+    # knob that keeps hops exact (round_robin would change W_t, so compare
+    # through the compressed path with int8 replaced by identity).
+    eng = CommEngine(_spec(CommSpec(compressor="topk", topk_frac=1.0,
+                                    gamma=1.0)))
+    cs = eng.init_state({"x": tree0})
+    got, _ = eng.mix(cs, "x", tree0, steps=2, rnd=0)
+    want = _spec().mix(tree0, steps=2)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# channel
+# ---------------------------------------------------------------------------
+
+
+def test_channel_droprate0_bitexact_mix_ring():
+    tree0 = _tree()
+    ch = ChannelModel.for_gossip(_spec(), CommSpec())
+    out = ch.mix_hop(tree0, 0, jax.random.PRNGKey(0))
+    want = G.mix_ring(tree0, steps=1)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        assert bool(jnp.all(a == b))  # bit-exact: same op, same order
+
+
+@pytest.mark.parametrize("comm", [
+    CommSpec(drop_rate=0.3),
+    CommSpec(straggler_rate=0.25),
+    CommSpec(schedule="round_robin"),
+    CommSpec(schedule="matching"),
+    CommSpec(drop_rate=0.1, straggler_rate=0.1, schedule="matching"),
+])
+def test_channel_wt_doubly_stochastic(comm):
+    ch = ChannelModel.for_gossip(_spec(), comm)
+    for rnd in range(4):
+        wt = np.asarray(ch.w_t(rnd, jax.random.PRNGKey(rnd)))
+        np.testing.assert_allclose(wt.sum(0), 1.0, atol=1e-6)
+        np.testing.assert_allclose(wt.sum(1), 1.0, atol=1e-6)
+        np.testing.assert_allclose(wt, wt.T, atol=1e-6)
+        assert (wt >= -1e-6).all()
+
+
+def test_channel_matchings_are_matchings():
+    ch = ChannelModel.for_gossip(_spec(), CommSpec(schedule="matching"))
+    masks = np.asarray(ch._subset_masks)
+    assert masks.shape[0] >= 2          # even ring splits into >= 2 classes
+    # the classes exactly cover the base edge set
+    edges = (np.asarray(_spec().matrix) > 0) & ~np.eye(N, dtype=bool)
+    np.testing.assert_allclose(masks.sum(0), edges.astype(np.float32))
+    for m in masks:                      # each class touches a node <= once
+        assert (m.sum(1) <= 1.0 + 1e-9).all()
+
+
+def test_faulty_channel_still_reaches_consensus():
+    tree0 = _tree()
+    comm = CommSpec(drop_rate=0.2, schedule="round_robin")
+    eng = CommEngine(_spec(comm))
+    step = jax.jit(lambda x, cs, t: eng.mix(cs, "x", x, steps=1, rnd=t))
+    x, cs = tree0, eng.init_state({"x": tree0})
+    for t in range(250):
+        x, cs = step(x, cs, t)
+    assert _cons_err(x) < 1e-3 * _cons_err(tree0)
+    # mean preserved: every W_t is doubly stochastic
+    for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(tree0)):
+        np.testing.assert_allclose(jnp.mean(a, 0), jnp.mean(b, 0), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quant_mix kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,shape", [(8, (1024,)), (20, (37, 13)),
+                                        (6, (257,)), (3, (8, 128))])
+def test_quant_mix_interpret_matches_ref(rows, shape):
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(rows)
+    qs = [jax.random.randint(jax.random.fold_in(key, i), (rows, *shape),
+                             -127, 128, jnp.int8) for i in range(3)]
+    ss = [0.02 * jax.random.uniform(jax.random.fold_in(key, 10 + i),
+                                    (rows, 1)) + 1e-4 for i in range(3)]
+    want = ops.quant_mix(*qs, *ss, w_self=1 / 3, w_side=1 / 3, impl="ref")
+    got = ops.quant_mix(*qs, *ss, w_self=1 / 3, w_side=1 / 3,
+                        impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_fused_int8_hop_matches_unfused():
+    """Engine output with the fused quant_mix hop == plain dense-hat path."""
+    tree0 = _tree()
+    outs = []
+    for fuse in (True, False):
+        comm = CommSpec(compressor="int8", gamma=0.9, fuse_kernel=fuse)
+        eng = CommEngine(_spec(comm))
+        cs = eng.init_state({"x": tree0})
+        out, _ = eng.mix(cs, "x", tree0, steps=2, rnd=3)
+        outs.append(out)
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compressors & accounting
+# ---------------------------------------------------------------------------
+
+
+def test_int8_quantization_roundtrip_error_bounded():
+    comp = Int8Stochastic()
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    rec = comp(jax.random.PRNGKey(1), x)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
+    assert float(jnp.max(jnp.abs(rec - x) / scale)) <= 1.0 + 1e-5
+
+
+def test_topk_keeps_largest():
+    comp = TopK(frac=0.25)
+    x = jnp.asarray([[4.0, -5.0, 1.0, 0.5, 3.0, -2.0, 0.1, 0.2]])
+    rec = np.asarray(comp(jax.random.PRNGKey(0), x))
+    np.testing.assert_allclose(rec, [[4.0, -5.0, 0, 0, 0, 0, 0, 0]])
+
+
+def test_lowrank_is_projection():
+    comp = LowRank(rank=2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 16, 6))
+    rec = comp(jax.random.PRNGKey(1), x)
+    # projection: reconstruction never exceeds the input's norm, and
+    # applying the sketch direction again is idempotent in spirit
+    assert float(jnp.linalg.norm(rec)) <= float(jnp.linalg.norm(x)) + 1e-5
+    # 2-D (non-matrix) leaves pass through untouched
+    flat = jax.random.normal(jax.random.PRNGKey(2), (3, 50))
+    np.testing.assert_allclose(comp(jax.random.PRNGKey(3), flat), flat)
+
+
+def test_bits_accounting():
+    tree = {"a": jnp.zeros((10, 100)), "b": jnp.zeros((10, 16, 8))}
+    n_params = 10 * 100 + 10 * 16 * 8
+    assert tree_bits(make_compressor(CommSpec(compressor="none")), tree) \
+        == 32 * n_params
+    int8 = tree_bits(make_compressor(CommSpec(compressor="int8")), tree)
+    assert int8 == 8 * n_params + 2 * 10 * 32
+    topk = tree_bits(make_compressor(
+        CommSpec(compressor="topk", topk_frac=0.1)), tree)
+    assert topk == 10 * (10 + 13) * 64   # ceil-ish rounding of k per leaf
+    lowrank = tree_bits(make_compressor(
+        CommSpec(compressor="lowrank", rank=2)), tree)
+    assert lowrank == 32 * 10 * 100 + 10 * 2 * (16 + 8) * 32
+
+
+# ---------------------------------------------------------------------------
+# optimizer integration
+# ---------------------------------------------------------------------------
+
+
+def _toy_problem():
+    from repro.core.minimax import MinimaxProblem
+    from repro.core import manifolds as M
+
+    d, r, ngrp = 8, 2, 3
+
+    def loss_fn(x, y, batch):
+        z = batch["z"]                      # (b, d)
+        proj = z @ x["w"]                   # (b, r)
+        per_group = jnp.stack([jnp.mean(proj ** 2)] * ngrp) + x["bias"].sum()
+        return jnp.sum(y * per_group) - 0.5 * jnp.sum(y ** 2)
+
+    x0 = {"w": M.random_stiefel(jax.random.PRNGKey(0), d, r),
+          "bias": jnp.zeros((4,))}
+    mask = {"w": True, "bias": False}
+    return MinimaxProblem(
+        loss_fn=loss_fn, stiefel_mask=mask,
+        project_y=lambda y: jnp.clip(y, 0.0, 1.0)), x0, ngrp
+
+
+@pytest.mark.parametrize("name", ["drgda", "gt-gda", "dm-hsgd", "gt-srvr"])
+def test_optimizers_run_with_comm(name):
+    """Every optimizer threads CommState through its jitted step."""
+    from repro.core import OPTIMIZERS
+    from repro.core.gda import broadcast_to_nodes
+
+    problem, x0, ngrp = _toy_problem()
+    n = 4
+    comm = CommSpec(compressor="int8", gamma=0.9, drop_rate=0.1)
+    opt = OPTIMIZERS[name](problem, _spec(comm, n=n))
+    xs = broadcast_to_nodes(x0, n)
+    ys = jnp.full((n, ngrp), 1.0 / ngrp)
+    batch = {"z": jax.random.normal(jax.random.PRNGKey(1), (n, 16, 8))}
+    state = opt.init(xs, ys, batch)
+    assert state.comm is not None
+    fns = opt.make_step(donate=False)
+    step_fn = fns[0] if isinstance(fns, tuple) else fns
+    for t in range(3):
+        state, metrics = step_fn(state, batch)
+    assert np.isfinite(float(metrics.loss))
+
+
+def test_drgda_identity_comm_matches_exact():
+    """A channel-only comm spec with zero faults must not change DRGDA."""
+    from repro.core import OPTIMIZERS
+    from repro.core.gda import broadcast_to_nodes
+
+    problem, x0, ngrp = _toy_problem()
+    n = 4
+    xs = broadcast_to_nodes(x0, n)
+    ys = jnp.full((n, ngrp), 1.0 / ngrp)
+    batch = {"z": jax.random.normal(jax.random.PRNGKey(1), (n, 16, 8))}
+
+    states = []
+    for comm in (None, CommSpec(compressor="topk", topk_frac=1.0, gamma=1.0)):
+        opt = OPTIMIZERS["drgda"](problem, _spec(comm, n=n))
+        state = opt.init(xs, ys, batch)
+        step_fn = opt.make_step(donate=False)
+        for _ in range(2):
+            state, _ = step_fn(state, batch)
+        states.append(state)
+    for a, b in zip(jax.tree.leaves(states[0].x), jax.tree.leaves(states[1].x)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_config_comm_knobs_roundtrip():
+    from repro.configs.base import ModelConfig
+
+    assert ModelConfig().comm_spec() is None
+    cfg = ModelConfig(comm_compressor="int8", comm_drop_rate=0.1)
+    spec = cfg.comm_spec()
+    assert spec is not None and spec.enabled and spec.compressor == "int8"
+    assert spec.drop_rate == 0.1

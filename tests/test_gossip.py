@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import gossip as G
 
@@ -70,9 +70,16 @@ def test_mix_pytree_and_small_n():
     spec1 = G.GossipSpec(topology="ring", n_nodes=1, k_steps=4)
     out1 = spec1.mix({"a": tree["a"]})
     np.testing.assert_allclose(out1["a"], tree["a"])
-    spec2 = G.GossipSpec(topology="ring", n_nodes=2, k_steps=1)
+    # self_weight is honored for n == 2: 0.5 gives full averaging,
+    # and matrix/mix_ring agree for any other weight.
+    spec2 = G.GossipSpec(topology="ring", n_nodes=2, k_steps=1, self_weight=0.5)
     out2 = spec2.mix({"b": tree["b"]})
     np.testing.assert_allclose(out2["b"][0], tree["b"].mean(0), atol=1e-6)
+    spec2w = G.GossipSpec(topology="ring", n_nodes=2, k_steps=1, self_weight=0.7)
+    np.testing.assert_allclose(
+        spec2w.mix({"b": tree["b"]})["b"],
+        G.mix_dense(jnp.asarray(spec2w.matrix, jnp.float32), tree["b"]),
+        atol=1e-6)
 
 
 def test_ring_mix_kernel_matches_gossip_hop():

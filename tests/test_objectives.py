@@ -5,7 +5,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro import configs
 from repro.core.minimax import project_simplex
