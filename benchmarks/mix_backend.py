@@ -1,0 +1,105 @@
+"""Mix-backend benchmark: stacked vs shard_map gossip hops.
+
+For a sweep of per-node model sizes, times jitted ``W^k`` mixes under both
+backends on an 8-virtual-device node mesh and reports hops/sec plus each
+backend's *estimated bytes moved per hop* (the stacked roll ships every node
+row both ways — and dense topologies all-gather — where the shard_map ring
+ships only the two edge rows per device).
+
+Because the device count must be forced before jax initializes, ``run()``
+re-executes this file in a worker subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and collects JSON
+from stdout; ``benchmarks/run.py mix`` saves it to
+``experiments/bench/mix_backend.json``.
+
+On this CPU container the timing is a *schedule* benchmark (one host backs
+all 8 devices, so wall-clock gains are modest); the bytes-per-hop column is
+the hardware-independent signal the perf trajectory tracks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N_DEVICES = 8
+N_NODES = 16          # two node rows per device: only edge rows hit the wire
+STEPS = 3
+REPEATS = 30
+
+# per-node leaf layouts: (name, [(leaf shape sans node axis), ...])
+SIZES = [
+    ("tiny_64k", [(128, 128), (16384,)]),
+    ("small_512k", [(256, 512), (8, 128, 128), (131072,)]),
+    ("medium_2m", [(512, 1024), (16, 256, 256), (524288,)]),
+]
+
+
+def _worker() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.comms.backend import ShardMapBackend, StackedBackend
+    from repro.core.gossip import GossipSpec
+
+    mesh = Mesh(np.asarray(jax.devices())[:N_DEVICES].reshape(N_DEVICES),
+                ("node",))
+    backends = {"stacked": StackedBackend(),
+                "shard_map": ShardMapBackend(mesh, axis="node")}
+    rows = []
+    t_all = time.time()
+    for name, leaf_shapes in SIZES:
+        key = jax.random.PRNGKey(0)
+        tree = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                           (N_NODES, *shp), jnp.float32)
+                for i, shp in enumerate(leaf_shapes)}
+        params = sum(int(l.size) for l in jax.tree.leaves(tree)) // N_NODES
+        for topology in ("ring", "full"):
+            spec = GossipSpec(topology=topology, n_nodes=N_NODES,
+                              k_steps=STEPS)
+            for bname, be in backends.items():
+                fn = jax.jit(lambda t, _be=be, _s=spec: _be.mix(_s, t, STEPS))
+                out = jax.block_until_ready(fn(tree))   # compile + warm
+                t0 = time.time()
+                for _ in range(REPEATS):
+                    out = jax.block_until_ready(fn(out))
+                dt = (time.time() - t0) / REPEATS
+                rows.append({
+                    "size": name, "params_per_node": params,
+                    "topology": topology, "backend": bname, "k": STEPS,
+                    "us_per_mix": dt * 1e6,
+                    "hops_per_sec": STEPS / dt,
+                    "est_bytes_per_hop": be.est_hop_bytes(spec, tree),
+                })
+    return {"n_devices": N_DEVICES, "n_nodes": N_NODES,
+            "rows": rows, "us_total": (time.time() - t_all) * 1e6}
+
+
+def run() -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count="
+                         f"{N_DEVICES}",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(_REPO_ROOT, "src"), _REPO_ROOT]))
+    out = subprocess.run([sys.executable, os.path.abspath(__file__),
+                          "--worker"], env=env, capture_output=True,
+                         text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"mix_backend worker failed:\n{out.stderr[-3000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+if __name__ == "__main__":
+    if "--worker" in sys.argv:
+        for _p in (os.path.join(_REPO_ROOT, "src"), _REPO_ROOT):
+            if _p not in sys.path:
+                sys.path.insert(0, _p)
+        print(json.dumps(_worker()))
+    else:
+        print(json.dumps(run(), indent=1))

@@ -9,6 +9,8 @@ payloads to experiments/bench/.
   consensus   — W^k contraction vs lambda_2^k theory; Stiefel consensus
   comms       — bits-per-parameter vs consensus error vs final M_t sweep
                 (EF-int8 / top-k / low-rank / naive; channel fault rates)
+  mix         — stacked vs shard_map backend: hops/sec + est bytes moved
+                per gossip hop across model sizes (8 virtual devices)
   complexity  — Theorem-1 decay-rate sanity (log-log slope of M_t)
   roofline    — dry-run roofline table summary (reads experiments/dryrun)
 """
@@ -104,6 +106,21 @@ def bench_comms():
     return res["us_total"] / max(n_rows, 1), derived
 
 
+def bench_mix():
+    from benchmarks import mix_backend
+    res = mix_backend.run()
+    _save("mix_backend", res)
+    rows = res["rows"]
+    ring = [r for r in rows if r["topology"] == "ring"]
+    by = {r["backend"]: r for r in ring if r["size"] == "medium_2m"}
+    sm, st = by["shard_map"], by["stacked"]
+    derived = (f"ring2m_shardmap_hps={sm['hops_per_sec']:.1f};"
+               f"ring2m_stacked_hps={st['hops_per_sec']:.1f};"
+               f"ring2m_bytes_ratio="
+               f"{st['est_bytes_per_hop'] / max(sm['est_bytes_per_hop'], 1):.1f}")
+    return res["us_total"] / max(len(rows), 1), derived
+
+
 def bench_complexity():
     from benchmarks import complexity
     res = complexity.run(steps=300)
@@ -130,6 +147,7 @@ ALL = {
     "dro": bench_dro,
     "consensus": bench_consensus,
     "comms": bench_comms,
+    "mix": bench_mix,
     "complexity": bench_complexity,
     "roofline": bench_roofline,
 }

@@ -145,6 +145,18 @@ class ChannelModel:
         w_off = off * mask
         return w_off + jnp.diag(1.0 - jnp.sum(w_off, axis=1))
 
+    def ring_link_weights(self, rnd: Array | int, key: Array
+                          ) -> tuple[Array, Array, Array]:
+        """Round ``rnd``'s effective ring weights as per-link vectors:
+        ``(self, left, right)`` of shape (n,) — the three non-zero diagonals
+        of ``w_t``.  This is what the shard_map backend consumes: channel
+        faults become ppermute-payload *filters*, and model-sized data never
+        meets a dense (n, n) matrix."""
+        wt = self.w_t(rnd, key)
+        n = self.n
+        i = jnp.arange(n)
+        return wt[i, i], wt[i, (i - 1) % n], wt[i, (i + 1) % n]
+
     # -- mixing -------------------------------------------------------------
 
     def mix_hop(self, tree: PyTree, rnd: Array | int, key: Array) -> PyTree:

@@ -20,6 +20,16 @@ The hop itself runs through :class:`repro.comms.channel.ChannelModel`
 fused Pallas ``quant_mix`` kernel: ``W(hat + dq(q)) = W hat + [dequantize +
 3-way combine of the int8 wire buffers]``.
 
+*How* any of these hops execute — stacked roll/einsum over leaf axis 0, or
+``shard_map``/``ppermute`` neighbour exchange over the mesh's node axis —
+is the engine's :class:`repro.comms.backend.MixBackend`; every wire touch
+in this module routes through it, so EF-int8 gossip and the fused hop work
+identically under both layouts.
+
+With ``gamma_mode="adaptive"`` the consensus step is derived from the
+compressor's tracked contraction delta (see :meth:`CommEngine._gamma`)
+instead of the ``CommSpec.gamma`` constant.
+
 Optimizers thread one :class:`CommState` pytree leaf through their jitted
 step; :func:`make_mixer` packages the slot-keyed routing so the four
 baselines and DRGDA/DRSGDA share the integration shim.
@@ -32,6 +42,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comms.backend import MixBackend, resolve_backend
 from repro.comms.channel import ChannelModel
 from repro.comms.compress import (Int8Stochastic, compress_tree,
                                   make_compressor, tree_bits,
@@ -46,6 +57,10 @@ class CommState(NamedTuple):
     """Per-node communication memory, carried as one optimizer-state leaf."""
     hats: dict[str, PyTree]   # CHOCO public copies, one per mixed slot
     key: Array                # base PRNG for quantization + channel faults
+    # per-slot EMA of the compressor's empirical contraction delta
+    # (E||C(r) - r||^2 <= (1 - delta)||r||^2); only tracked when
+    # CommSpec.gamma_mode == "adaptive"
+    deltas: Any = None
 
 
 def _salt(slot: str) -> int:
@@ -55,7 +70,7 @@ def _salt(slot: str) -> int:
 class CommEngine:
     """Static compression + channel machinery for one ``GossipSpec``."""
 
-    def __init__(self, gossip):
+    def __init__(self, gossip, backend: Optional[MixBackend] = None):
         comm: Optional[CommSpec] = gossip.comm
         assert comm is not None and comm.enabled, \
             "CommEngine requires an enabled GossipSpec.comm"
@@ -63,6 +78,10 @@ class CommEngine:
         self.comm = comm
         self.compressor = make_compressor(comm)
         self.channel = ChannelModel.for_gossip(gossip, comm)
+        # how hops execute: stacked roll/einsum or shard_map ppermute —
+        # every wire touch below goes through this strategy object
+        self.backend: MixBackend = backend if backend is not None \
+            else resolve_backend(gossip)
 
     # -- state --------------------------------------------------------------
 
@@ -72,7 +91,11 @@ class CommEngine:
         hats = ({name: jax.tree.map(jnp.zeros_like, tree)
                  for name, tree in slots.items()}
                 if self.comm.compressed else {})
-        return CommState(hats=hats, key=jax.random.PRNGKey(self.comm.seed))
+        deltas = ({name: jnp.ones((), jnp.float32) for name in slots}
+                  if self.comm.compressed and self.comm.adaptive_gamma
+                  else None)
+        return CommState(hats=hats, key=jax.random.PRNGKey(self.comm.seed),
+                         deltas=deltas)
 
     # -- accounting (static, pure Python over shapes) -----------------------
 
@@ -96,7 +119,8 @@ class CommEngine:
 
         if not self.comm.compressed:
             # channel-only: full-precision payload over the faulty links
-            return self.channel.mix(tree, rnd, k_chan, steps=s), state
+            return (self.backend.mix_channel(self.gossip, self.channel, tree,
+                                             rnd, k_chan, steps=s), state)
 
         hat = state.hats[slot]
         source = (jax.tree.map(lambda x, h: x - h, tree, hat)
@@ -105,12 +129,38 @@ class CommEngine:
         hat_new = (jax.tree.map(lambda h, p: h + p, hat, payload)
                    if self.comm.error_feedback else payload)
         mixed_hat = self._gossip_hats(hat_new, hat, wire, s, rnd, k_chan)
-        gamma = self.comm.gamma
+        gamma, deltas = self._gamma(state, slot, source, payload)
         mixed = jax.tree.map(lambda x, mh, h: x + gamma * (mh - h),
                              tree, mixed_hat, hat_new)
         new_hats = dict(state.hats)
         new_hats[slot] = hat_new
-        return mixed, CommState(hats=new_hats, key=state.key)
+        return mixed, CommState(hats=new_hats, key=state.key, deltas=deltas)
+
+    def _gamma(self, state: CommState, slot: str, source: PyTree,
+               payload: PyTree):
+        """Consensus step size on the hats.
+
+        ``fixed``: the hand-tuned ``CommSpec.gamma`` constant.  ``adaptive``:
+        track the compressor's empirical contraction
+        ``delta = 1 - ||C(r) - r||^2 / ||r||^2`` per slot as an EMA and step
+        with it — CHOCO's admissible step scales with delta, so a lossless
+        wire recovers gamma -> 1 and an aggressive compressor automatically
+        backs off instead of trusting a config constant.
+        """
+        if not self.comm.adaptive_gamma:
+            return self.comm.gamma, state.deltas
+        src_sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                     for l in jax.tree.leaves(source))
+        err_sq = sum(jnp.sum(jnp.square((p - s).astype(jnp.float32)))
+                     for p, s in zip(jax.tree.leaves(payload),
+                                     jax.tree.leaves(source)))
+        obs = jnp.clip(1.0 - err_sq / (src_sq + 1e-30), 0.0, 1.0)
+        ema = self.comm.gamma_ema
+        delta = ema * state.deltas[slot] + (1.0 - ema) * obs
+        gamma = jnp.clip(delta, self.comm.gamma_min, 1.0)
+        deltas = dict(state.deltas)
+        deltas[slot] = delta
+        return gamma, deltas
 
     # -- internals ----------------------------------------------------------
 
@@ -139,22 +189,15 @@ class CommEngine:
     def _gossip_hats(self, hat_new: PyTree, hat_old: PyTree, wire,
                      s: int, rnd, k_chan: Array) -> PyTree:
         if wire is not None and self._use_fused_hop():
-            from repro.core.gossip import mix_ring  # cycle-safe at call time
-            from repro.kernels import ops
             qs, scales, treedef = wire
-            sw = self.gossip.self_weight
-            ws = (1.0 - sw) / 2.0
-            base = mix_ring(hat_old, steps=1, self_weight=sw) \
+            base = self.backend.mix_hop(self.gossip, hat_old) \
                 if self.comm.error_feedback else None
 
             def hop(q: Array, scale: Array, like: Array) -> Array:
                 n = q.shape[0]
-                q2 = q.reshape(n, -1)
-                sc = scale.reshape(n, 1)
-                out = ops.quant_mix(
-                    q2, jnp.roll(q2, 1, 0), jnp.roll(q2, -1, 0),
-                    sc, jnp.roll(sc, 1, 0), jnp.roll(sc, -1, 0),
-                    w_self=sw, w_side=ws, out_dtype=like.dtype)
+                out = self.backend.quant_ring_hop(
+                    self.gossip, q.reshape(n, -1), scale.reshape(n, 1),
+                    out_dtype=like.dtype)
                 return out.reshape(like.shape)
 
             leaves_old = jax.tree.leaves(hat_old)
@@ -163,9 +206,10 @@ class CommEngine:
                           for q, sc, l in zip(qs, scales, leaves_old)])
             first = (jax.tree.map(lambda b, w: b + w, base, wire_mix)
                      if base is not None else wire_mix)
-            return mix_ring(first, steps=s - 1, self_weight=sw) \
+            return self.backend.mix(self.gossip, first, steps=s - 1) \
                 if s > 1 else first
-        return self.channel.mix(hat_new, rnd, k_chan, steps=s)
+        return self.backend.mix_channel(self.gossip, self.channel, hat_new,
+                                        rnd, k_chan, steps=s)
 
 
 # ---------------------------------------------------------------------------
@@ -173,10 +217,11 @@ class CommEngine:
 # ---------------------------------------------------------------------------
 
 
-def maybe_engine(gossip) -> Optional[CommEngine]:
+def maybe_engine(gossip,
+                 backend: Optional[MixBackend] = None) -> Optional[CommEngine]:
     comm = getattr(gossip, "comm", None)
     if comm is not None and comm.enabled:
-        return CommEngine(gossip)
+        return CommEngine(gossip, backend=backend)
     return None
 
 
@@ -186,21 +231,25 @@ def maybe_init_state(engine: Optional[CommEngine],
 
 
 def make_mixer(gossip, engine: Optional[CommEngine],
-               comm_state: Optional[CommState], rnd: Array | int
+               comm_state: Optional[CommState], rnd: Array | int,
+               backend: Optional[MixBackend] = None
                ) -> tuple[Callable[[str, PyTree, int], PyTree],
                           Callable[[], Optional[CommState]]]:
     """Slot-keyed mix router for one optimizer step.
 
     Returns ``(mix, finalize)``: ``mix(slot, tree, steps)`` routes through
     the comms engine when one is configured (threading the CommState) and
-    through the exact ``gossip.mix`` otherwise; ``finalize()`` yields the
-    CommState to store in the next optimizer state.
+    through the exact path otherwise; ``finalize()`` yields the CommState to
+    store in the next optimizer state.  ``backend`` overrides how exact hops
+    execute (an engine carries its own backend); default is the gossip
+    spec's resolved backend.
     """
     box = {"cs": comm_state}
+    exact = backend if backend is not None else resolve_backend(gossip)
 
     def mix(slot: str, tree: PyTree, steps: int) -> PyTree:
         if engine is None:
-            return gossip.mix(tree, steps=steps)
+            return exact.mix(gossip, tree, steps)
         out, box["cs"] = engine.mix(box["cs"], slot, tree,
                                     steps=steps, rnd=rnd)
         return out

@@ -36,6 +36,12 @@ class CommSpec:
     rank: int = 4                  # retained rank per matrix leaf (lowrank)
     error_feedback: bool = True    # CHOCO memory on/off
     gamma: float = 0.9             # consensus step size on the hats
+    # "fixed" uses the ``gamma`` constant; "adaptive" tracks the compressor's
+    # empirical contraction delta (EMA, per slot, in CommState.deltas) and
+    # steps with it — see CommEngine._gamma.
+    gamma_mode: Literal["fixed", "adaptive"] = "fixed"
+    gamma_ema: float = 0.9         # EMA smoothing of the observed delta
+    gamma_min: float = 0.05        # floor on the adaptive step
     fuse_kernel: bool = True       # int8 ring hop through the quant_mix kernel
     # --- channel -----------------------------------------------------------
     drop_rate: float = 0.0         # per-edge i.i.d. Bernoulli drop probability
@@ -46,6 +52,10 @@ class CommSpec:
     @property
     def compressed(self) -> bool:
         return self.compressor != "none"
+
+    @property
+    def adaptive_gamma(self) -> bool:
+        return self.gamma_mode == "adaptive"
 
     @property
     def channel_active(self) -> bool:

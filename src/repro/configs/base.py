@@ -167,6 +167,12 @@ class ModelConfig:
     comm_drop_rate: float = 0.0
     comm_straggler_rate: float = 0.0
     comm_schedule: str = "static"      # static | round_robin | matching
+    # How gossip hops execute (repro.comms.backend): "stacked" keeps the
+    # node axis as leaf axis 0 on every device (roll/einsum mixing);
+    # "shard_map" maps it onto the training mesh's node axis (neighbour
+    # ppermute exchange); "auto" picks shard_map whenever build_trainer is
+    # given a mesh with a >1-device node axis.
+    mix_backend: str = "auto"
 
     def comm_spec(self):
         """repro.comms.CommSpec from the comm_* knobs, or None when the

@@ -91,7 +91,8 @@ class GTGDA:
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
                  hyper: GDAHyper = GDAHyper()):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
-        self.engine = comms_layer.maybe_engine(gossip)
+        self.backend = comms_layer.resolve_backend(gossip)
+        self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
 
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> GTState:
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, batch0)
@@ -103,7 +104,8 @@ class GTGDA:
     def step(self, state: GTState, batch: Any) -> tuple[GTState, StepMetrics]:
         h = self.hyper
         mix, comm_final = comms_layer.make_mixer(
-            self.gossip, self.engine, state.comm, state.step)
+            self.gossip, self.engine, state.comm, state.step,
+            backend=self.backend)
         x_new = jax.tree.map(lambda mx, u: mx - h.beta * u,
                              mix("x", state.x, 1), state.u)
         x_new = _project_back(self.problem.stiefel_mask, x_new, h.invsqrt)
@@ -165,7 +167,8 @@ class DMHSGD:
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
                  hyper: HSGDHyper = HSGDHyper()):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
-        self.engine = comms_layer.maybe_engine(gossip)
+        self.backend = comms_layer.resolve_backend(gossip)
+        self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
 
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> HSGDState:
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, batch0)
@@ -177,7 +180,8 @@ class DMHSGD:
     def step(self, state: HSGDState, batch: Any) -> tuple[HSGDState, StepMetrics]:
         h = self.hyper
         mix, comm_final = comms_layer.make_mixer(
-            self.gossip, self.engine, state.comm, state.step)
+            self.gossip, self.engine, state.comm, state.step,
+            backend=self.backend)
         loss, (gx_cur, gy_cur) = _euclid_grads(self.problem, state.x, state.y, batch)
         _, (gx_old, gy_old) = _euclid_grads(self.problem, state.x_prev, state.y_prev, batch)
 
@@ -242,7 +246,8 @@ class GTSRVR:
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
                  hyper: SRVRHyper = SRVRHyper()):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
-        self.engine = comms_layer.maybe_engine(gossip)
+        self.backend = comms_layer.resolve_backend(gossip)
+        self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
 
     def init(self, x0: PyTree, y0: Array, anchor_batch: Any) -> SRVRState:
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, anchor_batch)
@@ -256,7 +261,8 @@ class GTSRVR:
     def _update_params(self, state: SRVRState, gx_est, gy_est):
         h = self.hyper
         mix, comm_final = comms_layer.make_mixer(
-            self.gossip, self.engine, state.comm, state.step)
+            self.gossip, self.engine, state.comm, state.step,
+            backend=self.backend)
         u_new = jax.tree.map(lambda mu, g, gp: mu + g - gp,
                              mix("u", state.u, 1), gx_est, state.gx_est_prev)
         v_new = mix("v", state.v, 1) + gy_est - state.gy_est_prev

@@ -91,7 +91,10 @@ class DecentralizedGDA:
         self.gossip = gossip
         self.hyper = hyper
         self.k = hyper.k_override if hyper.k_override is not None else gossip.k
-        self.engine = comms_layer.maybe_engine(gossip)
+        # how every mix executes (stacked roll/einsum or shard_map ppermute);
+        # the optimizer math below never sees the difference
+        self.backend = comms_layer.resolve_backend(gossip)
+        self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
 
     # -- initialization -----------------------------------------------------
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> GDAState:
@@ -111,7 +114,8 @@ class DecentralizedGDA:
     def step(self, state: GDAState, batch: Any) -> tuple[GDAState, StepMetrics]:
         h, k = self.hyper, self.k
         mix, comm_final = comms_layer.make_mixer(
-            self.gossip, self.engine, state.comm, state.step)
+            self.gossip, self.engine, state.comm, state.step,
+            backend=self.backend)
 
         # ---- step 4: Riemannian consensus + tracked descent on x ----------
         mixed_x = mix("x", state.x, k)

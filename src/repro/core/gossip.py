@@ -139,7 +139,10 @@ def mix_dense(w: Array, tree, steps: int = 1):
 
 def _mix_leaf_ring(x: Array, wc: float, ws: float) -> Array:
     # jnp.roll over the (sharded) node axis -> collective-permute on ICI.
-    return wc * x + ws * jnp.roll(x, 1, axis=0) + ws * jnp.roll(x, -1, axis=0)
+    # The association wc*x + ws*(left + right) matches the ring_mix kernel
+    # (and its jnp oracle) bit-for-bit, so every backend's per-row combine
+    # is the same fp expression.
+    return wc * x + ws * (jnp.roll(x, 1, axis=0) + jnp.roll(x, -1, axis=0))
 
 
 def mix_ring(tree, steps: int = 1, self_weight: float = 1.0 / 3.0):
@@ -170,6 +173,10 @@ class GossipSpec:
     # comms import).  When set and enabled, the optimizers route mixing
     # through repro.comms.layer.CommEngine instead of the exact paths below.
     comm: object | None = None
+    # Optional repro.comms.backend.MixBackend (typed loosely for the same
+    # reason).  None => the stacked reference backend; launch/steps.py plugs
+    # in a ShardMapBackend when the training mesh has a real node axis.
+    backend: object | None = None
 
     @property
     def matrix(self) -> np.ndarray:
@@ -188,18 +195,17 @@ class GossipSpec:
         return required_gossip_steps(self.matrix, self.n_nodes)
 
     def mix(self, tree, steps: int | None = None):
-        """Apply W^steps (default: the spec's k) to a node-stacked pytree."""
+        """Apply W^steps (default: the spec's k) to a node-stacked pytree.
+
+        Execution is delegated to the spec's mix backend (see
+        :mod:`repro.comms.backend`): the stacked roll/einsum paths when
+        ``backend`` is None, neighbour-shard ``ppermute`` exchange under a
+        ``ShardMapBackend``.  The topology matrices above stay the
+        spectral-gap oracle either way.
+        """
         s = self.k if steps is None else steps
-        if self.n_nodes == 1 or s == 0:
-            return tree
-        if self.topology == "ring":
-            return mix_ring(tree, steps=s, self_weight=self.self_weight)
-        # W^s built ONCE per call (in float64 numpy, so it constant-folds
-        # under jit), not per leaf inside the tree map.
-        ws = jnp.asarray(np.linalg.matrix_power(self.matrix, s)
-                         if s > 1 else self.matrix, dtype=jnp.float32)
-        return jax.tree.map(lambda x: _mix_leaf_dense(ws.astype(x.dtype), x),
-                            tree)
+        from repro.comms.backend import resolve_backend  # lazy: no cycle
+        return resolve_backend(self).mix(self, tree, s)
 
     def mix_once(self, tree):
         return self.mix(tree, steps=1)

@@ -133,6 +133,14 @@ def stiefel_project(x: Array, g: Array, *, impl: str | None = None,
 
 def ring_mix(x_self: Array, x_left: Array, x_right: Array, *,
              w_self: float, w_side: float, impl: str | None = None) -> Array:
+    """Local gossip combine for arbitrary leaf sizes.
+
+    Data is flattened to (rows, LANE) VMEM panels; BOTH the lane tail and
+    the row tail are zero-padded (and sliced back) so the kernel's
+    ``rows % block_rows == 0`` tiling contract always holds — a prime-sized
+    leaf no longer degenerates to block_rows=1 (or trips the assert), it
+    costs at most 7 padded rows.
+    """
     impl = impl or _default_impl()
     if impl == "ref":
         return ref.ring_mix_ref(x_self, x_left, x_right, w_self, w_side)
@@ -141,19 +149,26 @@ def ring_mix(x_self: Array, x_left: Array, x_right: Array, *,
     n = x_self.size
     lane = _rm.LANE
     pad = (-n) % lane
+    rows = (n + pad) // lane
+    # pad rows to the 8-sublane boundary, then pick the largest block that
+    # tiles the padded panel exactly
+    pad_rows = (-rows) % 8
+    rows_p = rows + pad_rows
+    block = rows_p
+    for cand in (_rm.DEFAULT_BLOCK_ROWS, 128, 64, 32, 16, 8):
+        if rows_p % cand == 0:
+            block = cand
+            break
 
     def flat(a):
         af = a.reshape(-1)
         if pad:
             af = jnp.pad(af, (0, pad))
-        return af.reshape(-1, lane)
+        af = af.reshape(-1, lane)
+        if pad_rows:
+            af = jnp.pad(af, ((0, pad_rows), (0, 0)))
+        return af
 
-    rows = (n + pad) // lane
-    block = rows
-    for cand in (_rm.DEFAULT_BLOCK_ROWS, 128, 64, 32, 16, 8, 4, 2, 1):
-        if rows % cand == 0:
-            block = cand
-            break
     out = _rm.ring_mix_flat(flat(x_self), flat(x_left), flat(x_right),
                             w_self=w_self, w_side=w_side, block_rows=block,
                             interpret=(impl == "pallas_interpret"))

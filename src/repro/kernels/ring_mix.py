@@ -37,10 +37,16 @@ def ring_mix_flat(x_self: Array, x_left: Array, x_right: Array, *,
                   w_self: float, w_side: float,
                   block_rows: int = DEFAULT_BLOCK_ROWS,
                   interpret: bool = False) -> Array:
-    """Inputs: flat 2-D (rows, LANE) panels, rows % block_rows == 0."""
+    """Inputs: flat 2-D (rows, LANE) panels, rows % block_rows == 0.
+
+    Tiling contract (callers pad — see ``ops.ring_mix``): the grid covers
+    the panel exactly, so rows must be a multiple of the block."""
     rows, lane = x_self.shape
     block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0
+    if rows % block_rows:
+        raise ValueError(
+            f"ring_mix_flat: rows={rows} not a multiple of "
+            f"block_rows={block_rows}; pad the row tail (ops.ring_mix does)")
     kernel = functools.partial(_mix_kernel, w_self=w_self, w_side=w_side)
     spec = pl.BlockSpec((block_rows, lane), lambda i: (i, 0))
     return pl.pallas_call(

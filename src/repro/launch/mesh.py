@@ -57,3 +57,9 @@ def make_host_mesh(node: int = 1, fsdp: int = 1, model: int = 1) -> Mesh:
 
 def total_nodes(plan: MeshPlan, multi_pod: bool) -> int:
     return plan.node * (PODS if multi_pod else 1)
+
+
+def gossip_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes the decentralized node dimension lives on.  Multi-pod
+    meshes extend the gossip ring across pods: ("pod", "node")."""
+    return ("pod", "node") if "pod" in mesh.shape else ("node",)

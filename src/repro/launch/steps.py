@@ -26,15 +26,29 @@ PyTree = Any
 
 def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
                   hyper: Optional[GDAHyper] = None, topology: str = "ring",
-                  dtype=jnp.float32):
+                  dtype=jnp.float32, mesh=None,
+                  mix_backend: Optional[str] = None):
     """Returns (opt, problem).  Default hyper uses k=1 gossip per step (the
     paper's experimental regime); pass k_override=None-in-spec via
-    GossipSpec(k_steps=None) + hyper k_override to use the Theorem-1 k."""
+    GossipSpec(k_steps=None) + hyper k_override to use the Theorem-1 k.
+
+    ``mesh`` + ``mix_backend`` (default: the config's ``mix_backend`` knob)
+    select how gossip hops execute: given a training mesh whose node axis
+    has more than one device, "auto"/"shard_map" route every mix through
+    ``repro.comms.backend.ShardMapBackend`` — neighbour-shard ppermute
+    exchange instead of stacked roll/einsum mixing.
+    """
+    from repro.comms.backend import make_backend
+    from repro.launch.mesh import gossip_axes
+
     template = jax.eval_shape(
         lambda k: T.init_params(k, cfg, dtype), jax.random.PRNGKey(0))
     problem = lm_obj.make_lm_problem(cfg, template)
+    backend = make_backend(
+        mix_backend if mix_backend is not None else cfg.mix_backend,
+        mesh=mesh, axis=gossip_axes(mesh) if mesh is not None else "node")
     gossip = GossipSpec(topology=topology, n_nodes=n_nodes, k_steps=1,
-                        comm=cfg.comm_spec())
+                        comm=cfg.comm_spec(), backend=backend)
     hyper = hyper or GDAHyper(alpha=0.5, beta=0.02, eta=0.05)
     opt = OPTIMIZERS[optimizer](problem, gossip, hyper)
     return opt, problem

@@ -100,17 +100,32 @@ def _named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
 
 
+# state leaves that are per-run scalars/PRNG material, never node-stacked
+_REPLICATED_STATE_RE = re.compile(r"(^|/)comm/(key|deltas)(/|$)")
+
+
 def train_state_shardings(state_shapes: PyTree, mesh: Mesh,
                           multi_pod: bool) -> PyTree:
-    """Shardings for a GDAState (or baseline state) pytree of ShapeDtype."""
+    """Shardings for a GDAState (or baseline state) pytree of ShapeDtype.
+
+    Every node-stacked leaf — x/y/u/v, the gx/gy memories, AND the comms
+    CHOCO hats inside ``CommState`` — puts axis 0 on the node mesh axes, so
+    the shard_map mix backend's in_specs line up with the state layout and
+    no reshard happens at the mix boundary.  Non-node leaves (the PRNG key,
+    adaptive-gamma deltas, step counters, anything whose leading dim does
+    not divide over the node axes) are replicated: correctness never depends
+    on a sharding, only memory/perf do.
+    """
     node_axes = ("pod", "node") if multi_pod else ("node",)
+    n_node = int(np.prod([_axis_size(mesh, a) for a in node_axes]))
 
     def one(path_tuple, leaf):
         path = path_of(path_tuple)
         shape = leaf.shape
-        # y-like small leaves: (N, G) / scalars
-        if len(shape) == 0:
+        if len(shape) == 0 or _REPLICATED_STATE_RE.search(path):
             return _named(mesh, P())
+        if shape[0] % n_node or shape[0] < n_node:
+            return _named(mesh, P())        # not node-stacked: replicate
         if len(shape) <= 2:
             return _named(mesh, P(node_axes))
         return _named(mesh, train_param_spec(path, shape, mesh, multi_pod))

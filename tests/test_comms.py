@@ -78,6 +78,54 @@ def test_identity_comm_matches_exact_gossip():
 
 
 # ---------------------------------------------------------------------------
+# adaptive gamma
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_gamma_within_hand_tuned_consensus_error():
+    """gamma derived from the tracked contraction delta converges at least
+    as well (up to small-constant slack) as the hand-tuned constants."""
+    tree0 = _tree()
+    err0 = _cons_err(tree0)
+    fixed = _run_gossip(CommSpec(compressor="int8", gamma=0.95), 200, tree0)
+    adapt = _run_gossip(CommSpec(compressor="int8", gamma_mode="adaptive"),
+                        200, tree0)
+    assert adapt < 1e-4 * err0                      # still contracts to zero
+    assert adapt <= 5.0 * max(fixed, 1e-14)         # within the tuned constant
+    # aggressive sparsifier: the tracked delta (~0.65) beats the conservative
+    # hand constant 0.4 outright
+    fixed_tk = _run_gossip(CommSpec(compressor="topk", topk_frac=0.2,
+                                    gamma=0.4), 120, tree0)
+    adapt_tk = _run_gossip(CommSpec(compressor="topk", topk_frac=0.2,
+                                    gamma_mode="adaptive"), 120, tree0)
+    assert adapt_tk <= 5.0 * max(fixed_tk, 1e-14)
+
+
+def test_adaptive_gamma_tracks_compressor_delta():
+    """CommState.deltas is an EMA of 1 - ||C(r)-r||^2/||r||^2: near 1 for
+    int8, materially below 1 for a 20% sparsifier, untracked when fixed."""
+    tree0 = _tree()
+
+    def run(comm, rounds=30):
+        eng = CommEngine(_spec(comm))
+        step = jax.jit(lambda x, cs, t: eng.mix(cs, "x", x, steps=1, rnd=t))
+        x, cs = tree0, eng.init_state({"x": tree0})
+        for t in range(rounds):
+            x, cs = step(x, cs, t)
+        return cs
+
+    cs = run(CommSpec(compressor="int8", gamma_mode="adaptive"))
+    d_int8 = float(cs.deltas["x"])
+    assert 0.99 <= d_int8 <= 1.0
+    cs = run(CommSpec(compressor="topk", topk_frac=0.2,
+                      gamma_mode="adaptive"))
+    d_topk = float(cs.deltas["x"])
+    assert 0.3 <= d_topk <= 0.9 and d_topk < d_int8
+    cs = run(CommSpec(compressor="int8", gamma=0.9))
+    assert cs.deltas is None
+
+
+# ---------------------------------------------------------------------------
 # channel
 # ---------------------------------------------------------------------------
 

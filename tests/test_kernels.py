@@ -119,3 +119,23 @@ def test_ring_mix_kernel_sweep(n, seed):
     got = ops.ring_mix(a, b, c, w_self=0.4, w_side=0.3,
                        impl="pallas_interpret")
     np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    (1,),                # single element
+    (9973,)              # prime: 10 panel rows, ragged both ways
+    , (13, 1024),        # 13 rows — no old block-candidate divides it
+    (5, 1024 + 1),       # lane tail + odd row count
+    (3, 7, 191),         # multi-dim ragged leaf
+    (30 * 1024 + 7,),    # row tail past the 8-sublane boundary
+])
+def test_ring_mix_ragged_shapes(shape):
+    """Arbitrary leaf sizes tile cleanly: the dispatch pads ragged lane AND
+    row tails (and slices back) instead of degenerating to 1-row blocks or
+    tripping the kernel's tiling contract."""
+    ks = jax.random.split(jax.random.PRNGKey(sum(shape)), 3)
+    a, b, c = (jax.random.normal(k, shape) for k in ks)
+    want = ref.ring_mix_ref(a, b, c, 1 / 3, 1 / 3)
+    got = ops.ring_mix(a, b, c, w_self=1 / 3, w_side=1 / 3,
+                       impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)

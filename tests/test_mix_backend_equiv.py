@@ -1,0 +1,244 @@
+"""ShardMapBackend == StackedBackend, under 8 (virtual) devices.
+
+The in-process tests below need a multi-device jax runtime; they skip
+themselves on the default single-CPU tier-1 run and are exercised two ways:
+
+* ``test_equivalence_under_8_forced_devices`` re-runs this module in a
+  subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+  (always runs, so tier-1 covers the whole matrix);
+* the CI ``equiv-8dev`` job sets the same flag for the parent process and
+  runs the module directly.
+
+Equivalence levels asserted:
+
+* **bit-identical** (fp32, jitted): the exact clean-channel mix on ring and
+  full topologies for k in {1, 3}, the fused int8 ``quant_ring_hop``, and
+  the full EF-int8 CommEngine round on the unfused path.  Per-row combines
+  are expression-identical across backends, so compiled results match to
+  the bit.
+* **ulp-tolerance** (atol 1e-6): composite programs whose surrounding
+  elementwise chains cross different fusion boundaries (the fused engine
+  round, faulty-channel mixing) — XLA's FMA contraction may round 1-2 ulp
+  differently there even though every hop's math is identical.
+
+Plus the structural guarantee: the ring hop's jaxpr contains ``ppermute``
+and NO ``dot_general`` / dense contraction — neighbour exchange only.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import CommEngine, CommSpec
+from repro.comms.backend import ShardMapBackend, StackedBackend
+from repro.comms.channel import ChannelModel
+from repro.core.gossip import GossipSpec
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _mesh():
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices())[:8].reshape(8), ("node",))
+
+
+def _tree(n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(key, (n, 37, 13), jnp.float32),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (n, 129),
+                                   jnp.float32)}
+
+
+def _assert_bit_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert bool(jnp.all(x == y)), \
+            f"max |diff| = {float(jnp.max(jnp.abs(x - y)))}"
+
+
+def _assert_close(a, b, atol=1e-6):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# exact mix: bit identity
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+@pytest.mark.parametrize("topology", ["ring", "full"])
+@pytest.mark.parametrize("n", [8, 16])      # 1 and 2 node rows per device
+@pytest.mark.parametrize("k", [1, 3])
+def test_exact_mix_bit_identical(topology, n, k):
+    spec = GossipSpec(topology=topology, n_nodes=n, k_steps=k)
+    st, sm = StackedBackend(), ShardMapBackend(_mesh(), axis="node")
+    tree = _tree(n)
+    a = jax.jit(lambda t: st.mix(spec, t, k))(tree)
+    b = jax.jit(lambda t: sm.mix(spec, t, k))(tree)
+    _assert_bit_equal(a, b)
+
+
+@multi_device
+def test_ring_hop_is_permute_only_no_dense_contraction():
+    """The acceptance-criterion structural check: for the ring topology the
+    shard_map hop is ppermute + elementwise — the dense (n, n) einsum path
+    must not appear anywhere in the jaxpr."""
+    spec = GossipSpec(topology="ring", n_nodes=8, k_steps=3)
+    sm = ShardMapBackend(_mesh(), axis="node")
+    jaxpr = str(jax.make_jaxpr(lambda t: sm.mix(spec, t, 3))(_tree(8)))
+    assert "ppermute" in jaxpr
+    assert "dot_general" not in jaxpr and "einsum" not in jaxpr
+    # the dense fallback, by contrast, does contract (sanity of the check)
+    full = GossipSpec(topology="full", n_nodes=8, k_steps=1)
+    jaxpr_full = str(jax.make_jaxpr(lambda t: sm.mix(full, t, 1))(_tree(8)))
+    assert "dot_general" in jaxpr_full
+
+
+@multi_device
+def test_quant_ring_hop_bit_identical():
+    spec = GossipSpec(topology="ring", n_nodes=8, k_steps=1)
+    st, sm = StackedBackend(), ShardMapBackend(_mesh(), axis="node")
+    key = jax.random.PRNGKey(3)
+    q = jax.random.randint(key, (8, 481), -127, 128, jnp.int8)
+    sc = 0.01 * jax.random.uniform(jax.random.fold_in(key, 1), (8, 1)) + 1e-4
+    a = jax.jit(lambda q, s: st.quant_ring_hop(spec, q, s))(q, sc)
+    b = jax.jit(lambda q, s: sm.quant_ring_hop(spec, q, s))(q, sc)
+    _assert_bit_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# CommEngine: EF-int8 compression and channel faults under both backends
+# ---------------------------------------------------------------------------
+
+
+def _engine_round(backend, comm, n=8, steps=3):
+    spec = GossipSpec(topology="ring", n_nodes=n, k_steps=1, comm=comm,
+                      backend=backend)
+    eng = CommEngine(spec)
+    tree = _tree(n)
+    cs = eng.init_state({"x": tree})
+    out, _ = jax.jit(lambda c, t: eng.mix(c, "x", t, steps=steps, rnd=2))(
+        cs, tree)
+    return out
+
+
+@multi_device
+def test_ef_int8_engine_bit_identical_unfused():
+    comm = CommSpec(compressor="int8", gamma=0.9, fuse_kernel=False)
+    a = _engine_round(StackedBackend(), comm)
+    b = _engine_round(ShardMapBackend(_mesh(), axis="node"), comm)
+    _assert_bit_equal(a, b)
+
+
+@multi_device
+@pytest.mark.parametrize("comm", [
+    CommSpec(compressor="int8", gamma=0.9),                    # fused hop
+    CommSpec(compressor="int8", gamma=0.9, drop_rate=0.2),     # + faults
+    CommSpec(drop_rate=0.2, straggler_rate=0.1,
+             schedule="round_robin"),                          # channel-only
+])
+def test_engine_equivalent_across_backends(comm):
+    a = _engine_round(StackedBackend(), comm)
+    b = _engine_round(ShardMapBackend(_mesh(), axis="node"), comm)
+    _assert_close(a, b, atol=1e-6)
+
+
+@multi_device
+@pytest.mark.parametrize("steps", [1, 3])
+def test_faulty_channel_equivalent(steps):
+    """Same W_t sample path: per-link ppermute weights == dense W_t einsum."""
+    spec = GossipSpec(topology="ring", n_nodes=8, k_steps=1)
+    ch = ChannelModel.for_gossip(spec, CommSpec(
+        drop_rate=0.25, straggler_rate=0.1, schedule="matching"))
+    st, sm = StackedBackend(), ShardMapBackend(_mesh(), axis="node")
+    tree = _tree(8)
+    key = jax.random.PRNGKey(11)
+    a = jax.jit(lambda t: st.mix_channel(spec, ch, t, 5, key, steps))(tree)
+    b = jax.jit(lambda t: sm.mix_channel(spec, ch, t, 5, key, steps))(tree)
+    _assert_close(a, b, atol=1e-6)
+
+
+@multi_device
+def test_drgda_step_equivalent_across_backends():
+    """Two DRGDA steps end-to-end: the optimizer math never sees the
+    backend, so iterates must agree to fp32 roundoff."""
+    from repro.core import OPTIMIZERS
+    from repro.core.gda import broadcast_to_nodes
+    from repro.core import manifolds as M
+    from repro.core.minimax import MinimaxProblem
+
+    d, r, ngrp, n = 8, 2, 3, 8
+
+    def loss_fn(x, y, batch):
+        proj = batch["z"] @ x["w"]
+        per_group = jnp.stack([jnp.mean(proj ** 2)] * ngrp) + x["bias"].sum()
+        return jnp.sum(y * per_group) - 0.5 * jnp.sum(y ** 2)
+
+    problem = MinimaxProblem(
+        loss_fn=loss_fn, stiefel_mask={"w": True, "bias": False},
+        project_y=lambda y: jnp.clip(y, 0.0, 1.0))
+    x0 = {"w": M.random_stiefel(jax.random.PRNGKey(0), d, r),
+          "bias": jnp.zeros((4,))}
+    xs = broadcast_to_nodes(x0, n)
+    ys = jnp.full((n, ngrp), 1.0 / ngrp)
+    batch = {"z": jax.random.normal(jax.random.PRNGKey(1), (n, 16, d))}
+
+    finals = []
+    for backend in (StackedBackend(), ShardMapBackend(_mesh(), axis="node")):
+        spec = GossipSpec(topology="ring", n_nodes=n, k_steps=2,
+                          backend=backend)
+        opt = OPTIMIZERS["drgda"](problem, spec)
+        state = opt.init(xs, ys, batch)
+        step = opt.make_step(donate=False)
+        for _ in range(2):
+            state, _ = step(state, batch)
+        finals.append(state)
+    _assert_close(finals[0].x, finals[1].x, atol=1e-6)
+    _assert_close({"y": finals[0].y}, {"y": finals[1].y}, atol=1e-6)
+
+
+@multi_device
+def test_degenerate_small_n_falls_back_to_stacked_everywhere():
+    """n_nodes smaller than the mesh node axis must take the stacked paths
+    for exact, channel, and quant mixing — never the shard_map block math."""
+    spec = GossipSpec(topology="ring", n_nodes=2, k_steps=1)
+    st, sm = StackedBackend(), ShardMapBackend(_mesh(), axis="node")
+    tree = _tree(2)
+    _assert_bit_equal(jax.jit(lambda t: st.mix(spec, t, 2))(tree),
+                      jax.jit(lambda t: sm.mix(spec, t, 2))(tree))
+    ch = ChannelModel.for_gossip(spec, CommSpec(drop_rate=0.3))
+    key = jax.random.PRNGKey(0)
+    a = jax.jit(lambda t: st.mix_channel(spec, ch, t, 1, key, 2))(tree)
+    b = jax.jit(lambda t: sm.mix_channel(spec, ch, t, 1, key, 2))(tree)
+    _assert_bit_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# subprocess driver: force 8 host devices and run the matrix above
+# ---------------------------------------------------------------------------
+
+
+def test_equivalence_under_8_forced_devices():
+    if len(jax.devices()) >= 8:
+        pytest.skip("already multi-device; in-process tests cover this")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         os.path.abspath(__file__), "-k", "not forced_devices"],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.join(REPO, "tests"))
+    assert out.returncode == 0, \
+        (out.stdout[-3000:] + "\n" + out.stderr[-2000:])
+    assert "skipped" not in out.stdout.splitlines()[-1] or \
+        " 0 skipped" in out.stdout.splitlines()[-1]
