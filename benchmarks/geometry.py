@@ -1,0 +1,73 @@
+"""Retraction micro-bench: fused vs unfused vs eigh, per (d, r) sweep.
+
+Times one node-stacked Stiefel retraction step — the DRGDA x-update hot
+spot — per retraction implementation:
+
+  * ``polar_fused``   — kernels.ops.fused_retract (the Pallas kernel on
+    TPU; its jnp oracle here, which still fuses the tangent projection into
+    the same dispatch and shares the FLOP structure);
+  * ``polar_ns``      — unfused tangent_project + retract_polar(method="ns")
+    (two Grams + NS + apply as separate XLA ops);
+  * ``polar_eigh``    — the eigh oracle path (exact, not MXU-friendly);
+  * ``qr``            — jnp.linalg.qr retraction;
+  * ``cayley``        — matmul-only CG Cayley (geometry.stiefel).
+
+Writes experiments/bench/geometry.json via ``benchmarks/run.py geometry``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import manifolds as M
+from repro.kernels import ops
+
+SWEEP = [(256, 32), (512, 64), (1024, 128)]
+N_NODES = 8
+
+
+def _impls():
+    return {
+        "polar_fused": lambda x, g: ops.fused_retract(x, g),
+        "polar_ns": lambda x, g: M.retract_polar(
+            x, M.tangent_project(x, g), method="ns"),
+        "polar_eigh": lambda x, g: M.retract_polar(
+            x, M.tangent_project(x, g), method="eigh"),
+        "qr": lambda x, g: M.retract_qr(x, M.tangent_project(x, g)),
+        "cayley": lambda x, g: M.retract_cayley(x, M.tangent_project(x, g)),
+    }
+
+
+def _time(fn, x, g, iters: int = 20) -> float:
+    jfn = jax.jit(fn)
+    jfn(x, g).block_until_ready()          # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jfn(x, g)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> dict:
+    rows = []
+    t_start = time.time()
+    for d, r in SWEEP:
+        key = jax.random.PRNGKey(d)
+        x = M.random_stiefel(key, d, r, batch=(N_NODES,))
+        g = 0.1 * jax.random.normal(jax.random.fold_in(key, 1),
+                                    (N_NODES, d, r))
+        base = None
+        for name, fn in _impls().items():
+            us = _time(fn, x, g)
+            out = jax.jit(fn)(x, g)
+            feas = float(M.stiefel_error(out).max())
+            rows.append({"d": d, "r": r, "n_nodes": N_NODES, "impl": name,
+                         "us_per_call": us, "feasibility": feas})
+            if name == "polar_eigh":
+                base = us
+        for row in rows[-len(_impls()):]:
+            row["speedup_vs_eigh"] = base / max(row["us_per_call"], 1e-9)
+    return {"rows": rows, "backend": jax.default_backend(),
+            "us_total": (time.time() - t_start) * 1e6}

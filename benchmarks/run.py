@@ -11,6 +11,8 @@ payloads to experiments/bench/.
                 (EF-int8 / top-k / low-rank / naive; channel fault rates)
   mix         — stacked vs shard_map backend: hops/sec + est bytes moved
                 per gossip hop across model sizes (8 virtual devices)
+  geometry    — retraction micro-bench: fused kernel vs unfused NS vs eigh
+                (+ qr / cayley), node-stacked (d, r) sweep
   complexity  — Theorem-1 decay-rate sanity (log-log slope of M_t)
   roofline    — dry-run roofline table summary (reads experiments/dryrun)
 """
@@ -121,6 +123,23 @@ def bench_mix():
     return res["us_total"] / max(len(rows), 1), derived
 
 
+def bench_geometry():
+    from benchmarks import geometry
+    res = geometry.run()
+    _save("geometry", res)
+    rows = res["rows"]
+    big = [r for r in rows if (r["d"], r["r"]) == (1024, 128)]
+    by = {r["impl"]: r for r in big}
+    fused, ns, eigh = by["polar_fused"], by["polar_ns"], by["polar_eigh"]
+    worst_feas = max(r["feasibility"] for r in rows)
+    derived = (f"fused1024_us={fused['us_per_call']:.0f};"
+               f"ns1024_us={ns['us_per_call']:.0f};"
+               f"eigh1024_us={eigh['us_per_call']:.0f};"
+               f"fused_speedup_vs_eigh={fused['speedup_vs_eigh']:.2f};"
+               f"max_feasibility_residual={worst_feas:.1e}")
+    return res["us_total"] / max(len(rows), 1), derived
+
+
 def bench_complexity():
     from benchmarks import complexity
     res = complexity.run(steps=300)
@@ -148,6 +167,7 @@ ALL = {
     "consensus": bench_consensus,
     "comms": bench_comms,
     "mix": bench_mix,
+    "geometry": bench_geometry,
     "complexity": bench_complexity,
     "roofline": bench_roofline,
 }

@@ -34,7 +34,7 @@ def y_star(x, batches):                       # closed-form inner maximizer
 problem = MinimaxProblem(loss_fn=loss_fn, project_y=project_simplex,
                          stiefel_mask={"w": True}, y_star=y_star)
 opt = DRGDA(problem, GossipSpec(topology="ring", n_nodes=N),
-            GDAHyper(alpha=0.5, beta=0.05, eta=0.2))
+            GDAHyper(alpha=0.5, beta=0.03, eta=0.1))
 
 x0 = broadcast_to_nodes({"w": M.random_stiefel(jax.random.PRNGKey(0), D, R)}, N)
 y0 = jnp.full((N, G), 1.0 / G)
@@ -42,9 +42,9 @@ batches = 0.05 * jax.random.normal(jax.random.PRNGKey(1), (N, G, D, D))
 
 state = opt.init(x0, y0, batches)
 step = opt.make_step(donate=False)
-for t in range(200):
+for t in range(400):
     state, metrics = step(state, batches)
-    if t % 50 == 0:
+    if t % 100 == 0:
         m = convergence_metric(problem, state.x, state.y, batches)
         print(f"step {t:4d}  loss={metrics.loss:+.4f}  M_t={m['M_t']:.2e}  "
               f"consensus={m['consensus_x']:.2e}  "

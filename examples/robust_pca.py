@@ -1,0 +1,75 @@
+"""Robust PCA on the Grassmann manifold with DRGDA — end to end.
+
+min_{x in Gr(20,3)} max_{y in simplex_24}
+    sum_j y_j ||z_j - x x^T z_j||^2 / ||z_j||^2  -  rho ||y - 1/24||^2
+
+over an 8-node ring: the adversary up-weights the worst-reconstructed
+samples (the planted outliers), so the learned subspace must hedge against
+them instead of optimizing the average.  Only span(x) matters — the
+Grassmann geometry (horizontal-space projection, no symmetrization)
+quotients out basis rotations that the Stiefel geometry would waste
+consensus steps aligning.
+
+Two checks at the end:
+  * DRGDA converges in the paper's metric (M_t, Eq. 16) and recovers the
+    planted subspace to a small principal-angle distance;
+  * the minimax subspace beats plain pooled PCA on the WORST-CASE
+    objective Phi(x) = max_y f(x, y) — the robustness the adversary buys.
+
+Run:  PYTHONPATH=src python examples/robust_pca.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DRGDA, GDAHyper, GossipSpec
+from repro.core.gda import broadcast_to_nodes
+from repro.core.metric import convergence_metric
+from repro.geometry import GRASSMANN
+from repro.objectives import robust_pca as rp
+
+D, R, M, N, RHO = 20, 3, 24, 8, 0.5
+
+problem = rp.make_robust_pca_problem(rho=RHO)
+batches, true_basis = rp.make_batches(
+    jax.random.PRNGKey(1), n_nodes=N, m=M, d=D, r=R,
+    outlier_frac=0.1, outlier_scale=1.5)
+
+x0 = broadcast_to_nodes({"w": GRASSMANN.rand(jax.random.PRNGKey(0), D, R)}, N)
+y0 = rp.init_y(N, M)
+
+opt = DRGDA(problem, GossipSpec(topology="ring", n_nodes=N),
+            GDAHyper(alpha=0.5, beta=0.1, eta=0.3))
+state = opt.init(x0, y0, batches)
+step = opt.make_step(donate=False)
+
+for t in range(800):
+    state, metrics = step(state, batches)
+    if t % 200 == 0:
+        m = convergence_metric(problem, state.x, state.y, batches)
+        angle = float(GRASSMANN.dist(state.x["w"][0], true_basis))
+        print(f"step {t:4d}  loss={metrics.loss:+.4f}  M_t={m['M_t']:.2e}  "
+              f"consensus={m['consensus_x']:.2e}  "
+              f"feasibility={m['stiefel_residual']:.2e}  "
+              f"angle-to-truth={angle:.3f}")
+
+
+def worst_case(x):
+    """Phi(x) = max_y f(x, y) via the closed-form global maximizer."""
+    y_star = rp.robust_pca_y_star({"w": x}, batches, rho=RHO)
+    res = jnp.mean(jax.vmap(lambda z: rp.residuals(x, z))(batches["z"]), 0)
+    return float(jnp.dot(y_star, res) - RHO * jnp.sum((y_star - 1.0 / M) ** 2))
+
+
+m = convergence_metric(problem, state.x, state.y, batches)
+angle = float(GRASSMANN.dist(state.x["w"][0], true_basis))
+z = np.asarray(batches["z"].reshape(-1, D))
+pca_basis = jnp.asarray(np.linalg.eigh(z.T @ z)[1][:, -R:])
+phi_drgda, phi_pca = worst_case(state.x["w"][0]), worst_case(pca_basis)
+print(f"final M_t = {float(m['M_t']):.3e}, angle-to-truth = {angle:.3f} rad")
+print(f"worst-case objective: DRGDA {phi_drgda:.4f}  vs  pooled PCA "
+      f"{phi_pca:.4f}  (lower is more robust)")
+assert float(m["M_t"]) < 5e-3
+assert float(m["stiefel_residual"]) < 1e-4
+assert angle < 0.5
+assert phi_drgda <= phi_pca + 1e-4

@@ -131,11 +131,16 @@ class ModelConfig:
     n_codebooks: int = 1               # musicgen: 4 parallel EnCodec streams
     frontend: Optional[FrontendSpec] = None
     max_seq_len: int = 131072
-    # which parameters live on St(d, r): path-regex over '/'-joined key paths.
-    # Only tall/square (d >= r) matches are constrained (the mask builder
-    # filters); the rest stay Euclidean — see DESIGN.md §Arch-applicability.
+    # which parameters are manifold-constrained: path-regex over '/'-joined
+    # key paths.  Only tall/square (d >= r) matches are constrained (the map
+    # builder filters); the rest stay Euclidean — see DESIGN.md
+    # §Arch-applicability.
     manifold_policy: str = (
         r"attn/(wq|wk|wv|wo|w_dq|w_dkv)$|mlstm/(wq|wk|wv|w_down)$")
+    # which geometry the policy-matched leaves live on: a repro.geometry
+    # registry name — "stiefel" (orthonormal, the paper), "grassmann"
+    # (subspace-only), "oblique" (unit columns, normalized layers), "sphere"
+    manifold: str = "stiefel"
     # DRO group count for the minimax objective
     n_groups: int = 8
     rho: float = 1.0                   # strong-concavity coefficient (Eq. 20/21)

@@ -13,11 +13,12 @@ manifold, we add the retraction operation"):
 * **GT-SRVR**  (Zhang et al. 2021) — SPIDER/SVRG-style recursive variance
   reduction with periodic anchor batches + gradient tracking.
 
-All share the node-stacked pytree layout of :mod:`repro.core.gda`.  Stiefel
-leaves are *projected back* onto St(d, r) (polar factor) after the Euclidean
-update — i.e. the update direction is NOT tangent-projected, which is
-precisely what distinguishes them from DRGDA/DRSGDA and what the paper's
-figures show costs them convergence speed.
+All share the node-stacked pytree layout of :mod:`repro.core.gda`.
+Constrained leaves are *projected back* onto their manifold (polar factor on
+Stiefel/Grassmann, column normalization on oblique — each geometry's
+``project``) after the Euclidean update — i.e. the update direction is NOT
+tangent-projected, which is precisely what distinguishes them from
+DRGDA/DRSGDA and what the paper's figures show costs them convergence speed.
 """
 from __future__ import annotations
 
@@ -28,7 +29,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.comms import layer as comms_layer
-from repro.core import manifolds
 from repro.core.gda import (GDAHyper, StepMetrics, _consensus, _copy_tree,
                             _tree_consensus, _tree_mean_norm,
                             _vmapped_loss_and_rgrads)
@@ -39,10 +39,9 @@ Array = jax.Array
 PyTree = Any
 
 
-def _project_back(mask: PyTree, x: PyTree, method: str = "ns") -> PyTree:
-    return jax.tree.map(
-        lambda m, xi: manifolds.project_stiefel(xi, method) if m else xi,
-        mask, x)
+def _project_back(manifold_map: PyTree, x: PyTree, method: str = "ns") -> PyTree:
+    return jax.tree.map(lambda m, xi: m.project(xi, method=method),
+                        manifold_map, x)
 
 
 def _euclid_grads(problem: MinimaxProblem, x, y, batch):
@@ -108,7 +107,7 @@ class GTGDA:
             backend=self.backend)
         x_new = jax.tree.map(lambda mx, u: mx - h.beta * u,
                              mix("x", state.x, 1), state.u)
-        x_new = _project_back(self.problem.stiefel_mask, x_new, h.invsqrt)
+        x_new = _project_back(self.problem.manifold_map, x_new, h.invsqrt)
         y_new = jax.vmap(self.problem.project_y)(
             mix("y", state.y, 1) + h.eta * state.v)
 
@@ -193,7 +192,7 @@ class DMHSGD:
 
         x_new = jax.tree.map(lambda mx, d: mx - h.beta * d,
                              mix("x", state.x, 1), dx)
-        x_new = _project_back(self.problem.stiefel_mask, x_new, h.invsqrt)
+        x_new = _project_back(self.problem.manifold_map, x_new, h.invsqrt)
         y_new = jax.vmap(self.problem.project_y)(
             mix("y", state.y, 1) + h.eta * dy)
 
@@ -268,7 +267,7 @@ class GTSRVR:
         v_new = mix("v", state.v, 1) + gy_est - state.gy_est_prev
         x_new = jax.tree.map(lambda mx, u: mx - h.beta * u,
                              mix("x", state.x, 1), u_new)
-        x_new = _project_back(self.problem.stiefel_mask, x_new, h.invsqrt)
+        x_new = _project_back(self.problem.manifold_map, x_new, h.invsqrt)
         y_new = jax.vmap(self.problem.project_y)(
             mix("y", state.y, 1) + h.eta * v_new)
         return x_new, y_new, u_new, v_new, comm_final()

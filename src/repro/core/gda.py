@@ -23,10 +23,18 @@ Faithfulness notes
   base point (tangent-projected once, at evaluation); the tracker itself is
   mixed in ambient coordinates and re-projected only inside the x-update
   (step 4) — exactly the paper's "project only at step 4" remark.
-* Euclidean leaves (non-Stiefel parameters — embeddings, routers, gates)
-  follow the Euclidean specialization x <- x + alpha([Wx]_i - x) - beta u,
-  which is GT-GDA's update; with alpha = 1 this is the classic
-  gradient-tracking consensus step.
+* The x-update is geometry-generic: each leaf's manifold (from
+  ``MinimaxProblem.manifold_map``, see :mod:`repro.geometry`) supplies the
+  tangent projection, the consensus direction and the retraction.  Stiefel
+  leaves reproduce the paper's update exactly; Euclidean leaves collapse to
+  the specialization x <- x + alpha([Wx]_i - x) - beta u (GT-GDA's update;
+  with alpha = 1 the classic gradient-tracking consensus step); Grassmann /
+  oblique / sphere leaves run the same skeleton with their own geometry.
+* ``GDAHyper.retraction="polar_fused"`` routes Stiefel leaves through the
+  fused Pallas retraction kernel (tangent-project + Gram + Newton--Schulz +
+  apply in one VMEM pass): the ambient direction alpha*[W^k x]_i - beta*u
+  is handed to the kernel, which projects internally — valid because the
+  tangent projection is linear and P_x(x) = 0.
 * The y-update adds an explicit projection onto Y (the paper states
   y in Y compact convex; its analysis needs feasible iterates).
 """
@@ -39,9 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.comms import layer as comms_layer
-from repro.core import manifolds
 from repro.core.gossip import GossipSpec
-from repro.core.minimax import MinimaxProblem, apply_masked
+from repro.core.minimax import MinimaxProblem
 
 Array = jax.Array
 PyTree = Any
@@ -53,7 +60,10 @@ class GDAHyper:
     alpha: float = 0.5          # consensus step size (<= 1/M, M retraction bound)
     beta: float = 0.01          # descent step size for x
     eta: float = 0.05           # ascent step size for y
-    retraction: str = "polar"   # "polar" (paper default) | "qr"
+    # "polar" (paper default) | "qr" | "cayley" | "polar_fused" (fused
+    # Pallas kernel); resolved per leaf — geometries that don't implement
+    # the named kind fall back to their own default retraction.
+    retraction: str = "polar"
     invsqrt: str = "ns"         # "ns" (TPU, Newton-Schulz) | "eigh" (oracle)
     k_override: Optional[int] = None  # gossip steps; None -> GossipSpec.k
 
@@ -87,9 +97,13 @@ class DecentralizedGDA:
 
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
                  hyper: GDAHyper = GDAHyper()):
+        from repro.geometry import base as _gbase
         self.problem = problem
         self.gossip = gossip
         self.hyper = hyper
+        # typo guard: per-leaf resolution falls back silently (one config
+        # string drives mixed pytrees), so reject globally-unknown names here
+        _gbase.check_retraction_name(hyper.retraction)
         self.k = hyper.k_override if hyper.k_override is not None else gossip.k
         # how every mix executes (stacked roll/einsum or shard_map ppermute);
         # the optimizer math below never sees the difference
@@ -120,22 +134,20 @@ class DecentralizedGDA:
         # ---- step 4: Riemannian consensus + tracked descent on x ----------
         mixed_x = mix("x", state.x, k)
 
-        def stiefel_update(args):
-            x, mx, u = args
-            cons = h.alpha * manifolds.tangent_project(x, mx)   # P(alpha W^k x)
-            w = manifolds.tangent_project(x, u)                 # w_t = P(u_t)
-            return manifolds.retract(x, cons - h.beta * w, h.retraction,
-                                     **({"method": h.invsqrt}
-                                        if h.retraction == "polar" else {}))
+        def leaf_update(m, x, mx, u):
+            kind = m.resolve_retraction(h.retraction)
+            if kind == m.fused_retraction:
+                # fused path: hand the AMBIENT direction to the kernel — the
+                # tangent projection is linear with P_x(x) = 0, so
+                # P(alpha*mx - beta*u) == alpha*P(mx) - beta*P(u).
+                return m.retract(x, h.alpha * mx - h.beta * u, kind)
+            return m.descent_update(x, mx, u, alpha=h.alpha, beta=h.beta,
+                                    kind=kind,
+                                    **({"method": h.invsqrt}
+                                       if kind == "polar" else {}))
 
-        def eucl_update(args):
-            x, mx, u = args
-            return x + h.alpha * (mx - x) - h.beta * u
-
-        x_new = jax.tree.map(
-            lambda m, x, mx, u: stiefel_update((x, mx, u)) if m else eucl_update((x, mx, u)),
-            self.problem.stiefel_mask, state.x, mixed_x, state.u,
-        )
+        x_new = jax.tree.map(leaf_update, self.problem.manifold_map,
+                             state.x, mixed_x, state.u)
 
         # ---- step 5: Euclidean consensus + tracked ascent on y ------------
         y_new = jax.vmap(self.problem.project_y)(
@@ -200,9 +212,8 @@ def _copy_tree(tree: PyTree) -> PyTree:
 def _vmapped_loss_and_rgrads(problem: MinimaxProblem, x, y, batch):
     def one(xi, yi, bi):
         loss, (gx, gy) = jax.value_and_grad(problem.loss_fn, argnums=(0, 1))(xi, yi, bi)
-        rgx = apply_masked(problem.stiefel_mask, xi, gx,
-                           stiefel_fn=manifolds.tangent_project,
-                           eucl_fn=lambda _, g: g)
+        rgx = jax.tree.map(lambda m, xl, gl: m.tangent_project(xl, gl),
+                           problem.manifold_map, xi, gx)
         return loss, (rgx, gy)
     return jax.vmap(one)(x, y, batch)
 

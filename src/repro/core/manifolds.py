@@ -1,186 +1,39 @@
-"""Stiefel-manifold primitives used by the DRGDA/DRSGDA optimizers.
+"""Stiefel-manifold primitives — back-compat facade over ``repro.geometry``.
 
-The paper (Wu, Hu & Huang, AAAI'23) works on St(d, r) = {x in R^{d x r} :
-x^T x = I_r} with
-
-  * tangent projection  P_{T_x}(g) = g - x * sym(x^T g)          (Eq. 3)
-  * polar retraction    R_x(u)     = (x + u)(I_r + u^T u)^{-1/2}  (Lemma 1)
-  * induced arithmetic mean (IAM)  x_hat = P_St(mean_i x_i)       (Eq. 9)
-
-All functions operate on arrays whose *last two* dims are (d, r); leading
-dims (node axis, batched heads, ...) broadcast. TPU adaptation: the polar
-factors are computed with Newton--Schulz iterations (matmul-only, maps to
-the MXU) instead of SVD/eigh; an eigh-based oracle is kept for tests and for
-the CPU-exactness path.
+The math lives in :mod:`repro.geometry.stiefel` (one geometry of the
+pluggable manifold registry); this module keeps the historical flat-function
+surface (``tangent_project``/``retract_polar``/``project_stiefel``/...)
+that the paper-era call sites and tests use.  ``retract`` dispatches through
+the registered Stiefel geometry, so new retraction kinds (``cayley``,
+``polar_fused``) are available here without another if/elif ladder.
 """
 from __future__ import annotations
 
-import functools
-from typing import Literal
+from repro.geometry import STIEFEL
+from repro.geometry.stiefel import (  # noqa: F401
+    consensus_error,
+    induced_arithmetic_mean,
+    invsqrt_spd,
+    is_tangent,
+    project_stiefel,
+    random_stiefel,
+    retract_cayley,
+    retract_polar,
+    retract_qr,
+    rgd_step,
+    riemannian_grad,
+    stiefel_error,
+    sym,
+    tangent_project,
+)
+from repro.geometry.stiefel import _invsqrt_eigh, _invsqrt_newton_schulz  # noqa: F401
 
 import jax
-import jax.numpy as jnp
 
 Array = jax.Array
 
-# ---------------------------------------------------------------------------
-# basic tangent-space ops
-# ---------------------------------------------------------------------------
-
-
-def sym(a: Array) -> Array:
-    """Symmetric part (over the last two dims)."""
-    return 0.5 * (a + jnp.swapaxes(a, -1, -2))
-
-
-def tangent_project(x: Array, g: Array) -> Array:
-    """Orthogonal projection of ambient ``g`` onto T_x St(d, r)  (Eq. 3).
-
-    P_{T_x}(g) = g - x sym(x^T g).  Note P_{T_x}(x) = 0.
-    """
-    xtg = jnp.einsum("...dr,...ds->...rs", x, g)
-    return g - jnp.einsum("...dr,...rs->...ds", x, sym(xtg))
-
-
-def is_tangent(x: Array, u: Array, atol: float = 1e-5) -> Array:
-    """Check u in T_x M:  x^T u + u^T x = 0."""
-    a = jnp.einsum("...dr,...ds->...rs", x, u)
-    return jnp.max(jnp.abs(a + jnp.swapaxes(a, -1, -2))) < atol
-
-
-def stiefel_error(x: Array) -> Array:
-    """|| x^T x - I ||_F  (feasibility residual)."""
-    r = x.shape[-1]
-    xtx = jnp.einsum("...dr,...ds->...rs", x, x)
-    return jnp.linalg.norm(xtx - jnp.eye(r, dtype=x.dtype), axis=(-2, -1))
-
-
-# ---------------------------------------------------------------------------
-# matrix inverse square root: Newton--Schulz (TPU) and eigh (oracle)
-# ---------------------------------------------------------------------------
-
-
-def _invsqrt_eigh(a: Array) -> Array:
-    """Exact (I-free) inverse square root of an SPD matrix via eigh."""
-    w, v = jnp.linalg.eigh(a)
-    w = jnp.maximum(w, 1e-12)
-    return jnp.einsum("...ir,...r,...jr->...ij", v, jax.lax.rsqrt(w), v)
-
-
-def _invsqrt_newton_schulz(a: Array, iters: int = 20) -> Array:
-    """Inverse square root of SPD ``a`` via the coupled Newton--Schulz
-    (Denman--Beavers variant with Y/Z coupling) iteration.
-
-    Matmul-only => maps onto the TPU MXU; converges quadratically provided
-    ||I - a/c|| < 1 after the trace-based scaling below.  For the polar
-    retraction, ``a = I + u^T u`` is SPD with eigenvalues >= 1, and ``u`` is a
-    (step-size-scaled) tangent update, so conditioning is benign.
-    """
-    r = a.shape[-1]
-    eye = jnp.eye(r, dtype=a.dtype)
-    # scale so the spectrum lies in (0, 1]: the induced inf-norm (max abs
-    # row sum) upper-bounds the spectral radius of the symmetric ``a``;
-    # quadratic NS convergence then needs ~log2(log(eps)/log(1-1/cond))
-    # iterations — 12 covers cond ~ 1e2 at fp32 accuracy.
-    c = jnp.max(jnp.sum(jnp.abs(a), axis=-1), axis=-1)[..., None, None] + 1e-6
-    y = a / c
-    z = jnp.broadcast_to(eye, a.shape)
-
-    def body(_, yz):
-        y, z = yz
-        t = 0.5 * (3.0 * eye - z @ y)
-        return (y @ t, t @ z)
-
-    y, z = jax.lax.fori_loop(0, iters, body, (y, z))
-    # z ~ (a/c)^{-1/2}  =>  a^{-1/2} = z / sqrt(c)
-    return z * jax.lax.rsqrt(c)
-
-
-def invsqrt_spd(a: Array, method: Literal["ns", "eigh"] = "ns") -> Array:
-    if method == "eigh":
-        return _invsqrt_eigh(a)
-    return _invsqrt_newton_schulz(a)
-
-
-# ---------------------------------------------------------------------------
-# retractions
-# ---------------------------------------------------------------------------
-
-
-def retract_polar(x: Array, u: Array, method: Literal["ns", "eigh"] = "ns") -> Array:
-    """Polar retraction R_x(u) = (x+u)(I + u^T u)^{-1/2} (Lemma 1).
-
-    Valid for u in T_x M (then (x+u)^T (x+u) = I + u^T u).  Non-expansive
-    towards the manifold (Eq. 7), second-order bounded (Eq. 6).
-    """
-    r = u.shape[-1]
-    utu = jnp.einsum("...dr,...ds->...rs", u, u)
-    a = jnp.eye(r, dtype=u.dtype) + utu
-    return jnp.einsum("...dr,...rs->...ds", x + u, invsqrt_spd(a, method))
-
-
-def retract_qr(x: Array, u: Array) -> Array:
-    """QR retraction: qf(x + u) with sign fix so R_x(0) = x."""
-    q, rr = jnp.linalg.qr(x + u)
-    d = jnp.sign(jnp.diagonal(rr, axis1=-2, axis2=-1))
-    d = jnp.where(d == 0, 1.0, d)
-    return q * d[..., None, :]
-
 
 def retract(x: Array, u: Array, kind: str = "polar", **kw) -> Array:
-    if kind == "polar":
-        return retract_polar(x, u, **kw)
-    if kind == "qr":
-        return retract_qr(x, u)
-    raise ValueError(f"unknown retraction {kind!r}")
-
-
-# ---------------------------------------------------------------------------
-# projection onto the manifold (polar factor) + IAM
-# ---------------------------------------------------------------------------
-
-
-def project_stiefel(a: Array, method: Literal["ns", "eigh"] = "ns") -> Array:
-    """P_St(a): nearest Stiefel point = polar factor U of a = U P.
-
-    Computed as a (a^T a)^{-1/2}.  ``a`` must have full column rank (true for
-    averages of nearby Stiefel points, the only use in the algorithm).
-    """
-    ata = jnp.einsum("...dr,...ds->...rs", a, a)
-    return jnp.einsum("...dr,...rs->...ds", a, invsqrt_spd(ata, method))
-
-
-def induced_arithmetic_mean(xs: Array, method: Literal["ns", "eigh"] = "ns") -> Array:
-    """IAM over the leading axis (Eq. 9): P_St( (1/n) sum_i x_i )."""
-    return project_stiefel(jnp.mean(xs, axis=0), method)
-
-
-def consensus_error(xs: Array) -> Array:
-    """(1/n) || x - 1 (x_hat) ||^2 style residual (Eq. 10), returned as the
-    mean squared distance of the stacked replicas to their IAM."""
-    xhat = induced_arithmetic_mean(xs)
-    return jnp.mean(jnp.sum((xs - xhat) ** 2, axis=(-2, -1)))
-
-
-# ---------------------------------------------------------------------------
-# random points / misc
-# ---------------------------------------------------------------------------
-
-
-def random_stiefel(key: jax.Array, d: int, r: int, batch: tuple[int, ...] = (),
-                   dtype=jnp.float32) -> Array:
-    a = jax.random.normal(key, (*batch, d, r), dtype=dtype)
-    q, _ = jnp.linalg.qr(a)
-    return q
-
-
-def riemannian_grad(x: Array, egrad: Array) -> Array:
-    """Riemannian gradient = tangent projection of the Euclidean gradient."""
-    return tangent_project(x, egrad)
-
-
-@functools.partial(jax.jit, static_argnames=("kind",))
-def rgd_step(x: Array, egrad: Array, lr: float, kind: str = "polar") -> Array:
-    """Single-node Riemannian gradient-descent step (Eq. 4) — used by tests
-    and by the centralized reference implementations."""
-    return retract(x, -lr * tangent_project(x, egrad), kind)
+    """R_x(u) — dispatched through the geometry registry's Stiefel entry
+    (kinds: polar | qr | cayley | polar_fused)."""
+    return STIEFEL.retract(x, u, kind, **kw)

@@ -4,9 +4,10 @@
       + (1/n) || x_t - x_hat_t ||
       + (L/n) || y_bar_t - y*(x_hat_t) ||
 
-where x_hat is the IAM (Eq. 9) of the node replicas (Stiefel leaves) /
-Euclidean mean (other leaves), y_bar the Euclidean mean, and y* the exact
-inner maximizer (closed-form for the paper's quadratic-in-y objectives).
+where x_hat is the per-leaf induced arithmetic mean — the geometry's
+``consensus_mean`` (Eq. 9's IAM on Stiefel/Grassmann leaves, the Euclidean
+mean elsewhere) — y_bar the Euclidean mean, and y* the exact inner
+maximizer (closed-form for the paper's quadratic-in-y objectives).
 """
 from __future__ import annotations
 
@@ -15,8 +16,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import manifolds
-from repro.core.minimax import MinimaxProblem, apply_masked
+from repro.core.minimax import MinimaxProblem
 
 Array = jax.Array
 PyTree = Any
@@ -24,11 +24,10 @@ PyTree = Any
 
 def consensus_point(problem: MinimaxProblem, x_stacked: PyTree,
                     method: str = "eigh") -> PyTree:
-    """x_hat: IAM for Stiefel leaves, arithmetic mean for Euclidean leaves."""
+    """x_hat: each leaf's induced arithmetic mean over the node axis."""
     return jax.tree.map(
-        lambda m, xs: manifolds.induced_arithmetic_mean(xs, method)
-        if m else jnp.mean(xs, axis=0),
-        problem.stiefel_mask, x_stacked)
+        lambda m, xs: m.consensus_mean(xs, method=method),
+        problem.manifold_map, x_stacked)
 
 
 def global_riemannian_grad(problem: MinimaxProblem, x_hat: PyTree,
@@ -37,16 +36,13 @@ def global_riemannian_grad(problem: MinimaxProblem, x_hat: PyTree,
 
     ``batches`` is node-stacked local data; params are broadcast.
     """
-    n = jax.tree.leaves(batches)[0].shape[0]
-
     def one(bi):
         gx, _ = problem.grads(x_hat, y_bar, bi)
         return gx
 
     gx_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), jax.vmap(one)(batches))
-    return apply_masked(problem.stiefel_mask, x_hat, gx_mean,
-                        stiefel_fn=manifolds.tangent_project,
-                        eucl_fn=lambda _, g: g)
+    return jax.tree.map(lambda m, xl, gl: m.tangent_project(xl, gl),
+                        problem.manifold_map, x_hat, gx_mean)
 
 
 def convergence_metric(problem: MinimaxProblem, x_stacked: PyTree,
@@ -81,14 +77,17 @@ def convergence_metric(problem: MinimaxProblem, x_stacked: PyTree,
         "grad_norm": grad_norm,
         "consensus_x": cons_x / n,
         "dist_y_star": dist_y,
-        "stiefel_residual": _stiefel_residual(problem, x_stacked),
+        # feasibility residual over constrained leaves; key kept under the
+        # historical name for downstream readers of the metric dicts
+        "stiefel_residual": _feasibility_residual(problem, x_stacked),
     }
 
 
-def _stiefel_residual(problem: MinimaxProblem, x_stacked: PyTree) -> Array:
-    errs = [manifolds.stiefel_error(xs).max()
-            for m, xs in zip(jax.tree.leaves(problem.stiefel_mask),
-                             jax.tree.leaves(x_stacked)) if m]
+def _feasibility_residual(problem: MinimaxProblem, x_stacked: PyTree) -> Array:
+    errs = [jnp.max(m.check(xs))
+            for m, xs in zip(jax.tree.leaves(problem.manifold_map),
+                             jax.tree.leaves(x_stacked))
+            if m.name != "euclidean"]
     if not errs:
         return jnp.zeros(())
     return jnp.max(jnp.stack(errs))

@@ -7,9 +7,11 @@ A :class:`MinimaxProblem` packages everything the optimizers in
     node (min over ``x``, max over ``y``);
   * ``project_y``                        — Euclidean projection onto the
     compact convex set ``Y`` (simplex, ball, box, ...);
-  * ``stiefel_mask``                     — pytree (same structure as ``x``)
-    of bools: True leaves live on St(d, r) (last two dims), False leaves are
-    Euclidean;
+  * ``manifold_map``                     — pytree (same structure as ``x``)
+    describing which geometry each leaf lives on: a
+    :class:`repro.geometry.Manifold` instance, a registry name string, or a
+    legacy bool (True -> Stiefel, False -> Euclidean).  The legacy
+    ``stiefel_mask`` argument still works and feeds the same map;
   * optionally ``y_star(x, batch)``      — the exact inner maximizer, used by
     the convergence metric M_t (Eq. 16). Available in closed form for the
     paper's quadratic-in-y objectives (Eqs. 20, 21).
@@ -25,7 +27,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import manifolds
+from repro import geometry
+from repro.geometry import Product
 
 Array = jax.Array
 PyTree = Any
@@ -70,16 +73,38 @@ def project_box(lo: float, hi: float) -> Callable[[Array], Array]:
 
 @dataclasses.dataclass(frozen=True)
 class MinimaxProblem:
-    """min_{x in M} max_{y in Y} f(x, y; data) — one node's local view."""
+    """min_{x in M} max_{y in Y} f(x, y; data) — one node's local view.
+
+    ``stiefel_mask`` (legacy bool pytree) and ``manifold_map`` (geometry
+    spec pytree) are interchangeable inputs; after construction,
+    ``manifold_map`` always holds normalized Manifold instances and
+    ``stiefel_mask`` the derived bool view (True on Stiefel leaves).
+    """
 
     loss_fn: Callable[[PyTree, Array, Any], Array]
     project_y: Callable[[Array], Array]
-    stiefel_mask: PyTree
+    stiefel_mask: PyTree = None
     y_star: Optional[Callable[[PyTree, Any], Array]] = None
     # aux outputs (per-group losses etc.) for logging; loss_fn_aux returns
     # (loss, aux) when provided.
     loss_fn_aux: Optional[Callable[[PyTree, Array, Any], tuple]] = None
     name: str = "problem"
+    manifold_map: PyTree = None
+
+    def __post_init__(self):
+        spec = self.manifold_map if self.manifold_map is not None \
+            else self.stiefel_mask
+        if spec is None:
+            raise ValueError(
+                "MinimaxProblem needs a manifold_map (or legacy stiefel_mask)")
+        mmap = geometry.as_manifold_map(spec)
+        object.__setattr__(self, "manifold_map", mmap)
+        object.__setattr__(self, "stiefel_mask", geometry.bool_mask(mmap))
+
+    @property
+    def manifold(self) -> Product:
+        """The product geometry over the whole parameter pytree."""
+        return Product(self.manifold_map)
 
     # -- gradients ---------------------------------------------------------
     def grads(self, x: PyTree, y: Array, batch: Any) -> tuple[PyTree, Array]:
@@ -90,16 +115,13 @@ class MinimaxProblem:
     def rgrads(self, x: PyTree, y: Array, batch: Any) -> tuple[PyTree, Array]:
         """(Riemannian grad_x, euclidean grad_y).
 
-        Stiefel leaves are tangent-projected at their own base point (this is
-        the ``grad_x f_i`` in Alg. 1 steps 2/6); Euclidean leaves pass
-        through.
+        Constrained leaves are tangent-projected at their own base point
+        (this is the ``grad_x f_i`` in Alg. 1 steps 2/6); Euclidean leaves
+        pass through.
         """
         gx, gy = self.grads(x, y, batch)
-        rgx = apply_masked(
-            self.stiefel_mask, x, gx,
-            stiefel_fn=manifolds.tangent_project,
-            eucl_fn=lambda _, g: g,
-        )
+        rgx = jax.tree.map(lambda m, xi, gi: m.tangent_project(xi, gi),
+                           self.manifold_map, x, gx)
         return rgx, gy
 
     def value(self, x: PyTree, y: Array, batch: Any) -> Array:
@@ -107,7 +129,8 @@ class MinimaxProblem:
 
 
 def apply_masked(mask: PyTree, x: PyTree, g: PyTree, *, stiefel_fn, eucl_fn):
-    """tree_map dispatching on the per-leaf Stiefel mask."""
+    """tree_map dispatching on a per-leaf bool Stiefel mask (legacy helper —
+    new code should tree-map over a manifold_map instead)."""
     return jax.tree.map(
         lambda m, xi, gi: stiefel_fn(xi, gi) if m else eucl_fn(xi, gi),
         mask, x, g,
@@ -118,32 +141,26 @@ def stiefel_mask_from_paths(params: PyTree, predicate: Callable[[str], bool]) ->
     """Build a bool mask pytree by matching flattened key-paths.
 
     ``predicate`` receives a '/'-joined path string such as
-    ``'layers_0/attn/wq'``.
+    ``'layers_0/attn/wq'``.  See
+    :func:`repro.geometry.manifold_map_from_paths` for the geometry-generic
+    version this wraps.
     """
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    treedef = jax.tree.structure(params)
-    vals = []
-    for path, leaf in flat:
-        name = "/".join(_key_str(k) for k in path)
-        ok = bool(predicate(name)) and leaf.ndim >= 2 and leaf.shape[-2] >= leaf.shape[-1]
-        vals.append(ok)
-    return jax.tree.unflatten(treedef, vals)
+    mmap = geometry.manifold_map_from_paths(params, predicate,
+                                            manifold="stiefel")
+    return geometry.bool_mask(mmap)
 
 
-def _key_str(k) -> str:
-    if hasattr(k, "key"):
-        return str(k.key)
-    if hasattr(k, "idx"):
-        return str(k.idx)
-    if hasattr(k, "name"):
-        return str(k.name)
-    return str(k)
-
-
-def validate_stiefel(params: PyTree, mask: PyTree, atol: float = 1e-4) -> Array:
-    """Max feasibility residual over all Stiefel leaves (0.0 if none)."""
-    errs = [manifolds.stiefel_error(x).max()
-            for m, x in zip(jax.tree.leaves(mask), jax.tree.leaves(params)) if m]
+def validate_manifold(params: PyTree, map_or_mask: PyTree) -> Array:
+    """Max feasibility residual over all constrained leaves (0.0 if none)."""
+    mmap = geometry.as_manifold_map(map_or_mask)
+    errs = [jnp.max(m.check(x))
+            for m, x in zip(jax.tree.leaves(mmap), jax.tree.leaves(params))
+            if m.name != "euclidean"]
     if not errs:
         return jnp.zeros(())
     return jnp.max(jnp.stack(errs))
+
+
+def validate_stiefel(params: PyTree, mask: PyTree, atol: float = 1e-4) -> Array:
+    """Legacy alias of :func:`validate_manifold` (bool-mask call sites)."""
+    return validate_manifold(params, mask)

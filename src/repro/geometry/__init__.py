@@ -1,0 +1,15 @@
+"""repro.geometry — pluggable manifold subsystem.
+
+Registered geometries (``REGISTRY``): ``stiefel`` (the paper's default),
+``grassmann``, ``oblique``, ``sphere``, ``euclidean``; ``Product`` composes
+them over mixed pytrees.  See ``base.py`` for the seven-method protocol and
+the README's "geometry layer" section for how to add a manifold.
+"""
+from repro.geometry.base import (Manifold, REGISTRY, as_manifold_map,  # noqa: F401
+                                 bool_mask, get, manifold_map_from_paths,
+                                 register)
+from repro.geometry.euclidean import EUCLIDEAN, Euclidean  # noqa: F401
+from repro.geometry.stiefel import STIEFEL, Stiefel  # noqa: F401
+from repro.geometry.grassmann import GRASSMANN, Grassmann  # noqa: F401
+from repro.geometry.oblique import OBLIQUE, SPHERE, Oblique, Sphere  # noqa: F401
+from repro.geometry.product import Product  # noqa: F401

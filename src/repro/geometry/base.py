@@ -1,0 +1,232 @@
+"""Manifold protocol + registry — the pluggable geometry layer.
+
+Every geometry implements one small surface (the seven protocol methods
+below) over arrays whose *last two* dims are the matrix dims (d, r);
+leading dims (node axis, batched heads, ...) broadcast:
+
+  * ``tangent_project(x, g)`` — orthogonal projection of ambient ``g``
+    onto T_x M;
+  * ``retract(x, u, kind=..., **kw)`` — map a tangent step back onto M
+    (each geometry names its supported retractions);
+  * ``project(a)`` — nearest-point (or representative) projection of an
+    ambient point onto M;
+  * ``consensus_mean(xs)`` — induced arithmetic mean over the leading
+    node axis (paper Eq. 9 generalized: project the Euclidean mean);
+  * ``dist(x, y)`` — a distance (geodesic where cheap, extrinsic else);
+  * ``rand(key, d, r)`` — a uniform-ish random point;
+  * ``check(x)`` — feasibility residual (0 on the manifold).
+
+Optimizer hooks with sensible defaults (override only when the geometry
+needs different math):
+
+  * ``consensus_step(x, mx, alpha)`` — the consensus direction of the
+    DRGDA x-update.  Riemannian default ``alpha * P_x(mx)`` (correct
+    because ``P_x(x) = 0`` on the homogeneous geometries here);
+    :class:`~repro.geometry.euclidean.Euclidean` overrides with the
+    gradient-tracking form ``alpha * (mx - x)``.
+  * ``feasible_init(x)`` — one-time projection of raw initializer output
+    onto M (Stiefel/Grassmann use QR for exactness, see
+    ``sharding.partition.project_params_to_manifold``).
+
+Geometries register themselves under a name (``register``); ``get(name)``
+resolves them, and :func:`as_manifold_map` normalizes the per-leaf
+specification pytrees accepted by :class:`repro.core.minimax.MinimaxProblem`:
+bools (the legacy ``stiefel_mask`` — True -> "stiefel", False ->
+"euclidean"), registry names, or Manifold instances.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class Manifold:
+    """Base class: shared defaults for the protocol (see module docstring).
+
+    Subclasses must provide ``tangent_project``, ``retract``, ``project``,
+    ``dist``, ``rand`` and ``check``; ``consensus_mean`` defaults to
+    project-the-mean, which is the induced arithmetic mean for every
+    geometry registered here.
+    """
+
+    #: registry name
+    name: str = "abstract"
+    #: retraction kinds ``retract`` accepts
+    retractions: tuple[str, ...] = ()
+    #: used when ``kind`` is None or names a retraction this geometry
+    #: does not implement (a Product map shares one config string across
+    #: heterogeneous leaves)
+    default_retraction: str = ""
+    #: name of the fused-kernel retraction, or None.  A fused retraction
+    #: takes the *ambient* update direction and performs the tangent
+    #: projection inside the kernel (see kernels/retract.py).
+    fused_retraction: Optional[str] = None
+    #: True when points must be tall matrices (d >= r) — orthonormal-column
+    #: geometries; norm-constraint geometries accept any (d, r)
+    requires_tall: bool = False
+
+    # -- protocol ----------------------------------------------------------
+    def tangent_project(self, x: Array, g: Array) -> Array:
+        raise NotImplementedError
+
+    def retract(self, x: Array, u: Array, kind: Optional[str] = None,
+                **kw) -> Array:
+        raise NotImplementedError
+
+    def project(self, a: Array, method: str = "ns") -> Array:
+        raise NotImplementedError
+
+    def consensus_mean(self, xs: Array, method: str = "ns") -> Array:
+        """IAM over the leading axis (Eq. 9): project( mean_i xs_i )."""
+        return self.project(jnp.mean(xs, axis=0), method=method)
+
+    def dist(self, x: Array, y: Array) -> Array:
+        raise NotImplementedError
+
+    def rand(self, key: Array, d: int, r: int, batch: tuple[int, ...] = (),
+             dtype=jnp.float32) -> Array:
+        raise NotImplementedError
+
+    def check(self, x: Array) -> Array:
+        """Feasibility residual, 0 on the manifold (batched over leading
+        dims like the per-geometry error norms)."""
+        raise NotImplementedError
+
+    # -- optimizer hooks ---------------------------------------------------
+    def resolve_retraction(self, kind: Optional[str]) -> str:
+        """Map a (possibly foreign) retraction name onto one this geometry
+        implements — Product maps share one config string across leaves."""
+        if kind in self.retractions:
+            return kind
+        return self.default_retraction
+
+    def consensus_step(self, x: Array, mx: Array, alpha: float) -> Array:
+        """Tangent consensus direction of the DRGDA x-update (Alg. 1
+        step 4): ``alpha * P_x([W^k x]_i)``."""
+        return alpha * self.tangent_project(x, mx)
+
+    def descent_update(self, x: Array, mx: Array, u: Array, *, alpha: float,
+                       beta: float, kind: Optional[str] = None, **kw) -> Array:
+        """One DRGDA x-update on this leaf:
+        ``R_x( alpha P_x(mx) - beta P_x(u) )`` — overridden by Euclidean to
+        keep the historical flat-space expression bit-for-bit."""
+        cons = self.consensus_step(x, mx, alpha)
+        w = self.tangent_project(x, u)
+        return self.retract(x, cons - beta * w, kind, **kw)
+
+    def feasible_init(self, x: Array) -> Array:
+        """Map raw initializer output to a feasible starting point."""
+        return self.project(x)
+
+    def riemannian_grad(self, x: Array, egrad: Array) -> Array:
+        return self.tangent_project(x, egrad)
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+REGISTRY: dict[str, Manifold] = {}
+
+
+def register(manifold: Manifold) -> Manifold:
+    """Register a (stateless, shared) manifold instance under its name."""
+    REGISTRY[manifold.name] = manifold
+    return manifold
+
+
+def get(name: str) -> Manifold:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown manifold {name!r}; registered: {sorted(REGISTRY)}"
+        ) from None
+
+
+def known_retractions() -> set[str]:
+    """Union of retraction names over all registered geometries."""
+    return {k for m in REGISTRY.values() for k in m.retractions}
+
+
+def check_retraction_name(kind: str) -> str:
+    """Raise on a retraction name NO registered geometry implements.
+
+    ``resolve_retraction`` intentionally falls back per leaf (one config
+    string drives mixed Product maps), so typos would otherwise silently
+    measure each leaf's default — validate the name globally instead.
+    """
+    known = known_retractions()
+    if kind not in known:
+        raise ValueError(
+            f"unknown retraction {kind!r}; known: {sorted(known)}")
+    return kind
+
+
+# ---------------------------------------------------------------------------
+# per-leaf manifold maps
+# ---------------------------------------------------------------------------
+
+
+def _as_manifold(spec) -> Manifold:
+    if isinstance(spec, Manifold):
+        return spec
+    if isinstance(spec, str):
+        return get(spec)
+    if isinstance(spec, (bool, int)) or spec is None:
+        # legacy stiefel_mask bools: True -> Stiefel, False -> Euclidean
+        return get("stiefel") if spec else get("euclidean")
+    raise TypeError(f"cannot interpret {spec!r} as a manifold")
+
+
+def as_manifold_map(map_or_mask: PyTree) -> PyTree:
+    """Normalize a per-leaf geometry spec pytree to Manifold instances.
+
+    Accepts the legacy bool ``stiefel_mask`` pytrees, registry-name strings,
+    Manifold instances, or any mixture.
+    """
+    return jax.tree.map(_as_manifold, map_or_mask,
+                        is_leaf=lambda s: isinstance(s, Manifold))
+
+
+def bool_mask(manifold_map: PyTree) -> PyTree:
+    """Back-derive the legacy bool mask: True where the leaf is Stiefel."""
+    return jax.tree.map(lambda m: m.name == "stiefel", manifold_map,
+                        is_leaf=lambda s: isinstance(s, Manifold))
+
+
+def manifold_map_from_paths(params: PyTree, predicate: Callable[[str], bool],
+                            manifold: str | Manifold = "stiefel") -> PyTree:
+    """Per-leaf manifold map by matching '/'-joined key paths.
+
+    Matched leaves get ``manifold`` (name or instance) when they are
+    matrix-shaped (ndim >= 2; additionally tall, d >= r, for geometries
+    with ``requires_tall`` — orthonormal columns need it, norm constraints
+    don't); everything else stays Euclidean.
+    """
+    m = _as_manifold(manifold)
+    eu = get("euclidean")
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    vals = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        ok = bool(predicate(name)) and leaf.ndim >= 2 \
+            and (not m.requires_tall or leaf.shape[-2] >= leaf.shape[-1])
+        vals.append(m if ok else eu)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)

@@ -1,0 +1,65 @@
+"""Euclidean "manifold" — the identity geometry for unconstrained leaves.
+
+Makes the optimizer math uniformly geometry-generic: embeddings, routers,
+conv kernels and other unconstrained parameters run through the same
+per-leaf code path as Stiefel/Grassmann/oblique leaves, with every
+operation collapsing to its trivial form.  The one non-trivial override is
+``consensus_step``: the generic Riemannian consensus ``alpha * P_x(mx)``
+relies on ``P_x(x) = 0``, which does not hold in flat space, so the
+Euclidean specialization is the gradient-tracking form
+``x + alpha ([W x]_i - x)`` (GT-GDA's update; classic consensus at
+``alpha = 1``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.geometry.base import Manifold, register
+
+Array = jax.Array
+
+
+class Euclidean(Manifold):
+    name = "euclidean"
+    retractions = ("add",)
+    default_retraction = "add"
+
+    def tangent_project(self, x: Array, g: Array) -> Array:
+        return g
+
+    def retract(self, x: Array, u: Array, kind: Optional[str] = None,
+                **kw) -> Array:
+        return x + u
+
+    def project(self, a: Array, method: str = "ns") -> Array:
+        return a
+
+    def dist(self, x: Array, y: Array) -> Array:
+        return jnp.sqrt(jnp.sum((x - y) ** 2,
+                                axis=tuple(range(-min(x.ndim, 2), 0))))
+
+    def rand(self, key: Array, d: int, r: int, batch: tuple[int, ...] = (),
+             dtype=jnp.float32) -> Array:
+        return jax.random.normal(key, (*batch, d, r), dtype=dtype)
+
+    def check(self, x: Array) -> Array:
+        return jnp.zeros(x.shape[:-2] if x.ndim >= 2 else ())
+
+    def consensus_step(self, x: Array, mx: Array, alpha: float) -> Array:
+        return alpha * (mx - x)
+
+    def descent_update(self, x: Array, mx: Array, u: Array, *, alpha: float,
+                       beta: float, kind=None, **kw) -> Array:
+        # written exactly as GT-GDA's x + alpha([Wx]_i - x) - beta u — the
+        # summation order matters for bit-compatibility with the
+        # pre-geometry optimizer
+        return x + alpha * (mx - x) - beta * u
+
+    def feasible_init(self, x: Array) -> Array:
+        return x
+
+
+EUCLIDEAN = register(Euclidean())

@@ -1,0 +1,94 @@
+"""Oblique manifold OB(d, r) and the unit sphere — norm constraints.
+
+``Oblique`` is the product of r unit spheres S^{d-1}, one per *column* of
+the (d, r) leaf: x^T x has unit diagonal.  This is exactly the constraint
+set of column-normalized DNN layers (weight-normalized linear maps,
+normalized embedding directions), and every operation is a cheap row-wise
+(VPU, not MXU) op — no (r, r) Gram algebra, no inverse square roots.
+
+``Sphere`` treats the whole (d, r) block as one unit-Frobenius-norm vector
+(a fully-normalized layer); same formulas with the reduction over both
+trailing dims.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.geometry.base import Manifold, register
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+def _colnorm(x: Array) -> Array:
+    return jnp.sqrt(jnp.sum(x * x, axis=-2, keepdims=True))
+
+
+class Oblique(Manifold):
+    """Unit-norm columns over the last two dims."""
+
+    name = "oblique"
+    retractions = ("normalize",)
+    default_retraction = "normalize"
+
+    def tangent_project(self, x: Array, g: Array) -> Array:
+        # per column: g_c - x_c <x_c, g_c>   (x_c unit)
+        return g - x * jnp.sum(x * g, axis=-2, keepdims=True)
+
+    def retract(self, x: Array, u: Array, kind: Optional[str] = None,
+                **kw) -> Array:
+        return self.project(x + u)
+
+    def project(self, a: Array, method: str = "ns") -> Array:
+        return a / jnp.maximum(_colnorm(a), _EPS)
+
+    def dist(self, x: Array, y: Array) -> Array:
+        """Geodesic: sqrt(sum of squared per-column great-circle angles)."""
+        cos = jnp.clip(jnp.sum(x * y, axis=-2), -1.0, 1.0)
+        return jnp.linalg.norm(jnp.arccos(cos), axis=-1)
+
+    def rand(self, key: Array, d: int, r: int, batch: tuple[int, ...] = (),
+             dtype=jnp.float32) -> Array:
+        return self.project(jax.random.normal(key, (*batch, d, r), dtype))
+
+    def check(self, x: Array) -> Array:
+        return jnp.linalg.norm(_colnorm(x)[..., 0, :] - 1.0, axis=-1)
+
+
+class Sphere(Manifold):
+    """Unit Frobenius norm over the whole (d, r) block."""
+
+    name = "sphere"
+    retractions = ("normalize",)
+    default_retraction = "normalize"
+
+    def tangent_project(self, x: Array, g: Array) -> Array:
+        inner = jnp.sum(x * g, axis=(-2, -1), keepdims=True)
+        return g - x * inner
+
+    def retract(self, x: Array, u: Array, kind: Optional[str] = None,
+                **kw) -> Array:
+        return self.project(x + u)
+
+    def project(self, a: Array, method: str = "ns") -> Array:
+        nrm = jnp.sqrt(jnp.sum(a * a, axis=(-2, -1), keepdims=True))
+        return a / jnp.maximum(nrm, _EPS)
+
+    def dist(self, x: Array, y: Array) -> Array:
+        cos = jnp.clip(jnp.sum(x * y, axis=(-2, -1)), -1.0, 1.0)
+        return jnp.arccos(cos)
+
+    def rand(self, key: Array, d: int, r: int, batch: tuple[int, ...] = (),
+             dtype=jnp.float32) -> Array:
+        return self.project(jax.random.normal(key, (*batch, d, r), dtype))
+
+    def check(self, x: Array) -> Array:
+        return jnp.abs(jnp.sqrt(jnp.sum(x * x, axis=(-2, -1))) - 1.0)
+
+
+OBLIQUE = register(Oblique())
+SPHERE = register(Sphere())

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import quant_mix as _qm
 from repro.kernels import ref
+from repro.kernels import retract as _rt
 from repro.kernels import ring_mix as _rm
 from repro.kernels import stiefel_project as _sp
 
@@ -115,6 +116,47 @@ def stiefel_project(x: Array, g: Array, *, impl: str | None = None,
         gi_p = jnp.pad(gi, ((0, pd), (0, pr)))
         out = _sp.stiefel_project_2d(xi_p, gi_p, block_d=min(block, d_p),
                                      interpret=interpret)
+        return out[:d, :r]
+
+    if x.ndim == 2:
+        return one(x, g)
+    lead = x.shape[:-2]
+    xf = x.reshape((-1,) + x.shape[-2:])
+    gf = g.reshape((-1,) + g.shape[-2:])
+    out = jax.vmap(one)(xf, gf)
+    return out.reshape(lead + x.shape[-2:])
+
+
+# ---------------------------------------------------------------------------
+# fused polar retraction
+# ---------------------------------------------------------------------------
+
+
+def fused_retract(x: Array, g: Array, *, ns_iters: int = _rt.DEFAULT_NS_ITERS,
+                  impl: str | None = None,
+                  block_d: int = _rt.DEFAULT_BLOCK_D) -> Array:
+    """R_x(P_{T_x}(g)) over the last two dims; leading dims (the node-stacked
+    axis) are vmapped.  ``g`` is the AMBIENT update direction — tangent
+    projection happens inside the kernel (GDAHyper.retraction="polar_fused").
+    """
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.fused_retract_ref(x, g, ns_iters=ns_iters)
+
+    interpret = impl == "pallas_interpret"
+
+    def one(xi: Array, gi: Array) -> Array:
+        d, r = xi.shape
+        # pad r to the 128-lane boundary, d to a multiple of the block size;
+        # zero padding is exact (see kernels/retract.py docstring)
+        pr = (-r) % 128
+        pd = (-d) % 128
+        d_p = d + pd
+        block = block_d if d_p % block_d == 0 else 128
+        xi_p = jnp.pad(xi, ((0, pd), (0, pr)))
+        gi_p = jnp.pad(gi, ((0, pd), (0, pr)))
+        out = _rt.fused_retract_2d(xi_p, gi_p, block_d=min(block, d_p),
+                                   ns_iters=ns_iters, interpret=interpret)
         return out[:d, :r]
 
     if x.ndim == 2:

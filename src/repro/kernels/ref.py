@@ -135,6 +135,27 @@ def stiefel_project_ref(x: Array, g: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# fused polar retraction (tangent project + Gram + NS inverse sqrt + apply)
+# ---------------------------------------------------------------------------
+
+
+def fused_retract_ref(x: Array, g: Array, ns_iters: int = 20) -> Array:
+    """R_x(P_x(g)): polar retraction of the tangent-projected AMBIENT
+    direction — the fused kernel's semantics, in streaming-free jnp.
+    Same math sequence (the geometry layer's coupled Newton--Schulz
+    inverse sqrt), so FLOP structure matches."""
+    from repro.geometry.stiefel import _invsqrt_newton_schulz
+
+    u = stiefel_project_ref(x, g)
+    r = u.shape[-1]
+    utu = jnp.einsum("...dr,...ds->...rs", u, u)
+    a = jnp.eye(r, dtype=jnp.float32) + utu.astype(jnp.float32)
+    inv = _invsqrt_newton_schulz(a, ns_iters)
+    return jnp.einsum("...dr,...rs->...ds", (x + u).astype(jnp.float32),
+                      inv).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # ring gossip mix
 # ---------------------------------------------------------------------------
 

@@ -60,7 +60,7 @@ def init_train_state(key, cfg: ModelConfig, opt, n_nodes: int, batch0,
     from repro.sharding.partition import project_params_to_manifold
 
     params = T.init_params(key, cfg, dtype)
-    params = project_params_to_manifold(params, opt.problem.stiefel_mask)
+    params = project_params_to_manifold(params, opt.problem.manifold_map)
     x0 = broadcast_to_nodes(params, n_nodes)
     y0 = lm_obj.init_y(cfg, n_nodes)
     return opt.init(x0, y0, batch0)

@@ -1,1 +1,1 @@
-from repro.objectives import fair, lm  # noqa: F401
+from repro.objectives import fair, lm, robust_pca  # noqa: F401

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.minimax import MinimaxProblem, project_simplex, stiefel_mask_from_paths
+from repro.core.minimax import MinimaxProblem, project_simplex
+from repro.geometry import manifold_map_from_paths
 from repro.models import transformer as T
 
 Array = jax.Array
@@ -96,12 +97,13 @@ def lm_y_star(params, batches: dict, cfg: ModelConfig) -> Array:
 def make_lm_problem(cfg: ModelConfig, params_template) -> MinimaxProblem:
     import re
     pattern = re.compile(cfg.manifold_policy)
-    mask = stiefel_mask_from_paths(
-        params_template, lambda path: bool(pattern.search(path)))
+    mmap = manifold_map_from_paths(
+        params_template, lambda path: bool(pattern.search(path)),
+        manifold=cfg.manifold)
     return MinimaxProblem(
         loss_fn=functools.partial(lm_minimax_loss, cfg=cfg),
         project_y=project_simplex,
-        stiefel_mask=mask,
+        manifold_map=mmap,
         y_star=functools.partial(lm_y_star, cfg=cfg),
         name=f"group-dro-lm/{cfg.name}",
     )

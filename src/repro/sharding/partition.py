@@ -183,16 +183,18 @@ def serve_batch_shardings(spec_tree: PyTree, mesh: Mesh,
     return jax.tree_util.tree_map_with_path(one, spec_tree)
 
 
-def project_params_to_manifold(params: PyTree, mask: PyTree) -> PyTree:
-    """Project masked leaves onto St(d,r) (used once at init so every leaf
-    the policy selects starts feasible, regardless of its initializer).
+def project_params_to_manifold(params: PyTree, map_or_mask: PyTree) -> PyTree:
+    """Map every constrained leaf to a feasible starting point (used once at
+    init so every leaf the policy selects starts feasible, regardless of its
+    initializer).  Accepts a geometry manifold_map or a legacy bool mask.
 
-    Uses QR orthonormalization: exact feasibility regardless of the raw
-    initializer's conditioning (polar/NS inverse-sqrt loses digits when
-    x^T x has tiny eigenvalues, e.g. 1/sqrt(d)-scaled dense inits).  The
-    algorithm only needs x0 ON the manifold, not the nearest point."""
-    from repro.core import manifolds
+    Each geometry picks its own ``feasible_init``: Stiefel/Grassmann use QR
+    orthonormalization (exact feasibility regardless of the raw
+    initializer's conditioning — polar/NS inverse-sqrt loses digits when
+    x^T x has tiny eigenvalues, e.g. 1/sqrt(d)-scaled dense inits; the
+    algorithm only needs x0 ON the manifold, not the nearest point),
+    oblique/sphere normalize, Euclidean passes through."""
+    from repro import geometry
 
-    return jax.tree.map(
-        lambda m, x: manifolds.retract_qr(jnp.zeros_like(x), x) if m else x,
-        mask, params)
+    return jax.tree.map(lambda m, x: m.feasible_init(x),
+                        geometry.as_manifold_map(map_or_mask), params)

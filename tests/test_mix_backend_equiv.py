@@ -50,6 +50,13 @@ def _mesh():
     return Mesh(np.asarray(jax.devices())[:8].reshape(8), ("node",))
 
 
+def _pod_mesh():
+    """2x4 virtual pods: the gossip ring linearizes ("pod", "node")
+    row-major into one 8-device ring spanning both pods."""
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices())[:8].reshape(2, 4), ("pod", "node"))
+
+
 def _tree(n, seed=0):
     key = jax.random.PRNGKey(seed)
     return {"w": jax.random.normal(key, (n, 37, 13), jnp.float32),
@@ -113,6 +120,48 @@ def test_quant_ring_hop_bit_identical():
     a = jax.jit(lambda q, s: st.quant_ring_hop(spec, q, s))(q, sc)
     b = jax.jit(lambda q, s: sm.quant_ring_hop(spec, q, s))(q, sc)
     _assert_bit_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# multi-pod rings: ShardMapBackend(axis=("pod","node")) on a 2x4 mesh
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+@pytest.mark.parametrize("topology", ["ring", "full"])
+@pytest.mark.parametrize("n", [8, 16])
+@pytest.mark.parametrize("k", [1, 3])
+def test_virtual_pod_mix_bit_identical(topology, n, k):
+    """The ROADMAP's multi-pod case: a ring over the linearized
+    ("pod", "node") axes of a 2x4 mesh must stay bit-identical to the
+    stacked reference, exactly like the flat 8-device node axis."""
+    spec = GossipSpec(topology=topology, n_nodes=n, k_steps=k)
+    st, sm = StackedBackend(), ShardMapBackend(_pod_mesh(),
+                                               axis=("pod", "node"))
+    assert sm.axis_size == 8
+    tree = _tree(n, seed=2)
+    a = jax.jit(lambda t: st.mix(spec, t, k))(tree)
+    b = jax.jit(lambda t: sm.mix(spec, t, k))(tree)
+    _assert_bit_equal(a, b)
+
+
+@multi_device
+def test_virtual_pod_quant_hop_and_channel():
+    spec = GossipSpec(topology="ring", n_nodes=8, k_steps=1)
+    st, sm = StackedBackend(), ShardMapBackend(_pod_mesh(),
+                                               axis=("pod", "node"))
+    key = jax.random.PRNGKey(5)
+    q = jax.random.randint(key, (8, 355), -127, 128, jnp.int8)
+    sc = 0.01 * jax.random.uniform(jax.random.fold_in(key, 1), (8, 1)) + 1e-4
+    _assert_bit_equal(jax.jit(lambda q, s: st.quant_ring_hop(spec, q, s))(q, sc),
+                      jax.jit(lambda q, s: sm.quant_ring_hop(spec, q, s))(q, sc))
+    ch = ChannelModel.for_gossip(spec, CommSpec(
+        drop_rate=0.25, straggler_rate=0.1, schedule="matching"))
+    tree = _tree(8, seed=3)
+    ckey = jax.random.PRNGKey(13)
+    a = jax.jit(lambda t: st.mix_channel(spec, ch, t, 4, ckey, 3))(tree)
+    b = jax.jit(lambda t: sm.mix_channel(spec, ch, t, 4, ckey, 3))(tree)
+    _assert_close(a, b, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------
