@@ -1,6 +1,7 @@
-"""Assemble EXPERIMENTS.md §Dry-run and §Roofline from
-experiments/dryrun/*.json.  §Perf iterations and §Paper-repro are appended
-by hand as the hillclimb proceeds (hypothesis → change → before → after).
+"""Assemble EXPERIMENTS.md §Dry-run, §Roofline and §Telemetry from
+experiments/dryrun/*.json and experiments/bench/obs.json.  §Perf iterations
+and §Paper-repro are appended by hand as the hillclimb proceeds
+(hypothesis → change → before → after).
 
 Usage:  PYTHONPATH=src python -m benchmarks.build_report [--write]
 """
@@ -100,8 +101,77 @@ def _note(r: dict) -> str:
     return "compute-bound: near roofline, MXU utilization is the lever"
 
 
-def build(recs) -> str:
-    return dryrun_section(recs) + "\n" + roofline_section(recs)
+def telemetry_section(obs: dict | None) -> str:
+    """§Telemetry from experiments/bench/obs.json: step-time breakdown +
+    per-round wire bytes.  Empty string when the obs bench hasn't run."""
+    if not obs:
+        return ""
+    out = ["## §Telemetry\n"]
+    out.append(
+        f"`benchmarks/run.py obs` — DRGDA, {obs['n_nodes']} nodes, ring, "
+        f"flush every {obs['flush_every']} steps.  Counters ride the jitted\n"
+        f"step as one packed f32[6] state leaf; ordinary steps compile to an\n"
+        f"effect-free executable, the io_callback flush lands on one call\n"
+        f"per window (`repro.obs`).\n")
+    out.append(
+        f"* overhead: **{obs['overhead_pct']:.2f}%** "
+        f"({obs['us_per_step_off']:.0f} -> {obs['us_per_step_on']:.0f} "
+        f"us/step, min over {obs.get('repeats', '?')} interleaved blocks)")
+    out.append(f"* obs-on trajectory bit-identical: "
+               f"**{obs['bit_identical']}**")
+    out.append(
+        f"* counter-vs-oracle bytes/hop relative error: "
+        f"**{obs['bytes_per_hop_rel_err']:.1e}** "
+        f"({obs['bytes_per_hop']:.0f} B/hop measured)\n")
+
+    pb = obs.get("phase_breakdown", {})
+    if pb:
+        out.append("Step-time breakdown (separately-jitted phases):\n")
+        out.append("| phase | us/call | fraction |")
+        out.append("|---|---|---|")
+        for name, us in pb["us_per_call"].items():
+            out.append(f"| {name} | {us:.0f} | {pb['fraction'][name]:.2f} |")
+        out.append("")
+
+    slots = obs.get("per_slot_est_hop_bytes", {})
+    hops = obs.get("per_slot_hops", {})
+    if slots and hops:
+        out.append("Wire bytes per gossip round (slot × hops, "
+                   "`est_hop_bytes` oracle):\n")
+        out.append("| slot | hops/round | bytes/hop | bytes/round |")
+        out.append("|---|---|---|---|")
+        for slot, b in slots.items():
+            h = hops.get(slot, 1)
+            out.append(f"| {slot} | {h} | {_fmt_bytes(b)} "
+                       f"| {_fmt_bytes(b * h)} |")
+        out.append("")
+
+    ke = obs.get("kernel_estimates", {})
+    if ke:
+        out.append("Analytical kernel estimates for one traced step "
+                   "(multiply by executed steps for run totals):\n")
+        out.append("| kernel | calls/trace | GFLOP | mem | FLOP/byte |")
+        out.append("|---|---|---|---|---|")
+        for name, rec in ke.items():
+            out.append(f"| {name} | {rec['calls']} | {rec['ops'] / 1e9:.3f} "
+                       f"| {_fmt_bytes(rec['mem'])} "
+                       f"| {rec['intensity']:.1f} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def load_obs() -> dict | None:
+    path = os.path.join(ROOT, "experiments", "bench", "obs.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def build(recs, obs=None) -> str:
+    text = dryrun_section(recs) + "\n" + roofline_section(recs)
+    tele = telemetry_section(obs)
+    return text + "\n" + tele if tele else text
 
 
 if __name__ == "__main__":
@@ -110,7 +180,7 @@ if __name__ == "__main__":
                     help="rewrite the §Dry-run/§Roofline block in EXPERIMENTS.md")
     args = ap.parse_args()
     recs = load_records()
-    text = build(recs)
+    text = build(recs, obs=load_obs())
     if args.write:
         path = os.path.join(ROOT, "EXPERIMENTS.md")
         marker_a = "<!-- AUTOGEN:DRYRUN-ROOFLINE:BEGIN -->"

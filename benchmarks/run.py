@@ -1,7 +1,9 @@
 """Benchmark harness — one entry per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows and writes the full JSON
-payloads to experiments/bench/.
+Prints ``name,us_per_call,derived`` CSV rows, writes the full JSON payloads
+to experiments/bench/, and appends one compact summary record per entry
+(name, key metrics, git rev, timestamp) to the top-level BENCH_summary.json
+so regressions are visible across revisions without diffing payloads.
 
   fair_det    — Fig. 1: DRGDA vs GT-GDA (deterministic fair classification)
   fair_stoch  — Fig. 2: DRSGDA vs GNSD-A / DM-HSGD / GT-SRVR
@@ -15,11 +17,13 @@ payloads to experiments/bench/.
                 (+ qr / cayley), node-stacked (d, r) sweep
   complexity  — Theorem-1 decay-rate sanity (log-log slope of M_t)
   roofline    — dry-run roofline table summary (reads experiments/dryrun)
+  obs         — telemetry overhead + counter-vs-estimate agreement
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -31,12 +35,53 @@ for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
         sys.path.insert(0, _p)
 
 BENCH_DIR = os.path.join(_REPO_ROOT, "experiments", "bench")
+SUMMARY_PATH = os.path.join(_REPO_ROOT, "BENCH_summary.json")
 
 
 def _save(name: str, payload: dict) -> None:
     os.makedirs(BENCH_DIR, exist_ok=True)
     with open(os.path.join(BENCH_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1)
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=_REPO_ROOT,
+            capture_output=True, text=True, timeout=10).stdout.strip() or "?"
+    except Exception:
+        return "?"
+
+
+def append_summary(name: str, us_per_call: float, derived: str,
+                   rev: str | None = None) -> dict:
+    """Append one compact record to the top-level BENCH_summary.json.
+
+    The file holds a flat list, newest last; ``derived`` is the same
+    key=value string the CSV row prints, split into a dict for grepping.
+    """
+    metrics: dict = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                metrics[k] = float(v)
+            except ValueError:
+                metrics[k] = v
+    rec = {"name": name, "us_per_call": round(us_per_call, 1),
+           "metrics": metrics, "git_rev": rev or _git_rev(),
+           "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
+    rows = []
+    if os.path.exists(SUMMARY_PATH):
+        try:
+            with open(SUMMARY_PATH) as f:
+                rows = json.load(f)
+        except Exception:
+            rows = []
+    rows.append(rec)
+    with open(SUMMARY_PATH, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rec
 
 
 def bench_fair_det():
@@ -160,6 +205,18 @@ def bench_roofline():
                            sorted(res["dominant_histogram"].items())))
 
 
+def bench_obs():
+    from benchmarks import obs
+    res = obs.run()
+    _save("obs", res)
+    derived = (f"overhead_pct={res['overhead_pct']:.2f};"
+               f"bit_identical={res['bit_identical']};"
+               f"bytes_per_hop_rel_err={res['bytes_per_hop_rel_err']:.2e};"
+               f"n_flushes={res['n_flushes']};"
+               f"n_events={res['n_events']}")
+    return res["us_per_step_on"], derived
+
+
 ALL = {
     "fair_det": bench_fair_det,
     "fair_stoch": bench_fair_stoch,
@@ -170,16 +227,19 @@ ALL = {
     "geometry": bench_geometry,
     "complexity": bench_complexity,
     "roofline": bench_roofline,
+    "obs": bench_obs,
 }
 
 
 def main() -> None:
     names = sys.argv[1:] or list(ALL)
+    rev = _git_rev()
     print("name,us_per_call,derived")
     for name in names:
         try:
             us, derived = ALL[name]()
             print(f"{name},{us:.1f},{derived}", flush=True)
+            append_summary(name, us, derived, rev=rev)
         except Exception as e:  # keep the harness going
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
 

@@ -116,21 +116,25 @@ class ChannelModel:
 
     # -- per-round effective matrix ----------------------------------------
 
-    def w_t(self, rnd: Array | int, key: Array) -> Array:
-        """Effective mixing matrix for round ``rnd`` (jit-safe, ``rnd`` may
-        be traced).  Always symmetric doubly stochastic."""
+    def _round_masks(self, rnd: Array | int, key: Array
+                     ) -> tuple[Array, Array]:
+        """(scheduled, effective) symmetric 0/1 link masks for round ``rnd``.
+
+        The random-draw sequence here IS the round's fault realization:
+        ``w_t`` consumes it for mixing and ``link_stats`` re-derives it with
+        the same keys for accounting, so counted drops match applied drops
+        exactly."""
         n = self.n
-        w = jnp.asarray(self.w, jnp.float32)
-        off = w * (1.0 - jnp.eye(n, dtype=jnp.float32))
         masks = jnp.asarray(self._subset_masks)
         if self.schedule == "round_robin":
-            mask = jnp.take(masks, jnp.mod(rnd, self.n_subsets), axis=0)
+            sched = jnp.take(masks, jnp.mod(rnd, self.n_subsets), axis=0)
         elif self.schedule == "matching":
             k_sched, key = jax.random.split(key)
-            mask = jnp.take(masks, jax.random.randint(
+            sched = jnp.take(masks, jax.random.randint(
                 k_sched, (), 0, self.n_subsets), axis=0)
         else:
-            mask = masks[0]
+            sched = masks[0]
+        mask = sched
         if self.drop_rate > 0.0:
             k_drop, key = jax.random.split(key)
             keep = jax.random.bernoulli(
@@ -142,8 +146,25 @@ class ChannelModel:
             up = jax.random.bernoulli(
                 k_straggle, 1.0 - self.straggler_rate, (n,)).astype(jnp.float32)
             mask = mask * (up[:, None] * up[None, :])
+        return sched, mask
+
+    def w_t(self, rnd: Array | int, key: Array) -> Array:
+        """Effective mixing matrix for round ``rnd`` (jit-safe, ``rnd`` may
+        be traced).  Always symmetric doubly stochastic."""
+        n = self.n
+        w = jnp.asarray(self.w, jnp.float32)
+        off = w * (1.0 - jnp.eye(n, dtype=jnp.float32))
+        _, mask = self._round_masks(rnd, key)
         w_off = off * mask
         return w_off + jnp.diag(1.0 - jnp.sum(w_off, axis=1))
+
+    def link_stats(self, rnd: Array | int, key: Array
+                   ) -> tuple[Array, Array]:
+        """(scheduled, active) undirected link counts for round ``rnd`` —
+        the telemetry wire counters' dynamic inputs (dropped = scheduled -
+        active).  Same draws as ``w_t`` for the same (rnd, key)."""
+        sched, mask = self._round_masks(rnd, key)
+        return jnp.sum(sched) / 2.0, jnp.sum(mask) / 2.0
 
     def ring_link_weights(self, rnd: Array | int, key: Array
                           ) -> tuple[Array, Array, Array]:

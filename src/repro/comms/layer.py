@@ -105,6 +105,39 @@ class CommEngine:
     def bits_per_param(self, tree: PyTree) -> float:
         return tree_bits(self.compressor, tree) / max(tree_param_count(tree), 1)
 
+    def wire_round_bytes(self, tree: PyTree, steps: int
+                         ) -> tuple[float, float]:
+        """(wire, raw) bytes for one ``steps``-hop gossip round over a clean
+        channel — the telemetry wire counters' static inputs.
+
+        ``raw`` is ``steps`` full-precision hops of the backend's
+        ``est_hop_bytes`` oracle.  A compressed round ships the payload
+        ``C(x - x_hat)`` to every neighbour once (2 on a ring, n-1 dense)
+        plus, for multi-hop rounds, ``steps - 1`` full-precision hat hops —
+        exactly how ``_gossip_hats`` executes.  wire/raw is the round's
+        realized compression ratio.
+        """
+        per_hop = self.backend.est_hop_bytes(self.gossip, tree)
+        raw = float(steps) * per_hop
+        if not self.comm.compressed:
+            return raw, raw
+        payload = tree_bits(self.compressor, tree) / 8.0
+        fanout = 2.0 if self.gossip.topology == "ring" \
+            else float(max(self.gossip.n_nodes - 1, 1))
+        wire = fanout * payload + float(max(steps - 1, 0)) * per_hop
+        return wire, raw
+
+    def _keys(self, state: CommState, slot: str, rnd: Array | int
+              ) -> tuple[Array, Array]:
+        """(k_quant, k_chan) for one round — the single derivation both the
+        mix and the telemetry accounting (``chan_key``) share."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(state.key, _salt(slot)), rnd)
+        return tuple(jax.random.split(key))
+
+    def chan_key(self, state: CommState, slot: str, rnd: Array | int) -> Array:
+        return self._keys(state, slot, rnd)[1]
+
     # -- one compressed gossip round ---------------------------------------
 
     def mix(self, state: CommState, slot: str, tree: PyTree, *,
@@ -113,9 +146,7 @@ class CommEngine:
         s = self.gossip.k if steps is None else steps
         if self.gossip.n_nodes == 1 or s == 0:
             return tree, state
-        key = jax.random.fold_in(
-            jax.random.fold_in(state.key, _salt(slot)), rnd)
-        k_quant, k_chan = jax.random.split(key)
+        k_quant, k_chan = self._keys(state, slot, rnd)
 
         if not self.comm.compressed:
             # channel-only: full-precision payload over the faulty links

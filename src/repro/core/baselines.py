@@ -30,10 +30,12 @@ import jax.numpy as jnp
 
 from repro.comms import layer as comms_layer
 from repro.core.gda import (GDAHyper, StepMetrics, _consensus, _copy_tree,
+                            _strong,
                             _tree_consensus, _tree_mean_norm,
-                            _vmapped_loss_and_rgrads)
+                            _vmapped_loss_and_rgrads, make_obs_step)
 from repro.core.gossip import GossipSpec
 from repro.core.minimax import MinimaxProblem
+from repro.obs import wire as obs_wire
 
 Array = jax.Array
 PyTree = Any
@@ -76,6 +78,7 @@ class GTState(NamedTuple):
     gy_prev: Array
     step: Array
     comm: Any = None
+    obs: Any = None
 
 
 class GTGDA:
@@ -88,23 +91,30 @@ class GTGDA:
     deterministic = True
 
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
-                 hyper: GDAHyper = GDAHyper()):
+                 hyper: GDAHyper = GDAHyper(), telemetry=None):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
         self.backend = comms_layer.resolve_backend(gossip)
         self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
+        self.telemetry = telemetry if telemetry is not None \
+            and telemetry.enabled else None
 
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> GTState:
+        x0, y0 = _strong(x0), _strong(y0)
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, batch0)
         comm0 = comms_layer.maybe_init_state(
             self.engine, {"x": x0, "y": y0, "u": gx, "v": gy})
+        obs0 = self.telemetry.init_counters() if self.telemetry else None
         return GTState(x0, y0, gx, gy, _copy_tree(gx), jnp.copy(gy),
-                       jnp.zeros((), jnp.int32), comm0)
+                       jnp.zeros((), jnp.int32), comm0, obs0)
 
     def step(self, state: GTState, batch: Any) -> tuple[GTState, StepMetrics]:
         h = self.hyper
         mix, comm_final = comms_layer.make_mixer(
             self.gossip, self.engine, state.comm, state.step,
             backend=self.backend)
+        mix, obs_final = obs_wire.wrap_mixer(
+            mix, state.obs, self.gossip, self.engine, self.backend,
+            state.comm, state.step)
         x_new = jax.tree.map(lambda mx, u: mx - h.beta * u,
                              mix("x", state.x, 1), state.u)
         x_new = _project_back(self.problem.manifold_map, x_new, h.invsqrt)
@@ -115,12 +125,15 @@ class GTGDA:
         u_new = jax.tree.map(lambda mu, g, gp: mu + g - gp,
                              mix("u", state.u, 1), gx, state.gx_prev)
         v_new = mix("v", state.v, 1) + gy - state.gy_prev
+        obs_new = obs_final()
+        if self.telemetry is not None:
+            self.telemetry.flush_counters(obs_new, state.step + 1)
         new = GTState(x_new, y_new, u_new, v_new, gx, gy, state.step + 1,
-                      comm_final())
+                      comm_final(), obs_new)
         return new, _metrics(loss, gx, gy, x_new, y_new, u_new)
 
     def make_step(self, donate: bool = True):
-        return jax.jit(self.step, donate_argnums=(0,) if donate else ())
+        return make_obs_step(self.step, self.telemetry, donate=donate)
 
 
 class GNSDA(GTGDA):
@@ -143,6 +156,7 @@ class HSGDState(NamedTuple):
     dy: Array
     step: Array
     comm: Any = None
+    obs: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,23 +178,30 @@ class DMHSGD:
     deterministic = False
 
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
-                 hyper: HSGDHyper = HSGDHyper()):
+                 hyper: HSGDHyper = HSGDHyper(), telemetry=None):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
         self.backend = comms_layer.resolve_backend(gossip)
         self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
+        self.telemetry = telemetry if telemetry is not None \
+            and telemetry.enabled else None
 
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> HSGDState:
+        x0, y0 = _strong(x0), _strong(y0)
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, batch0)
         comm0 = comms_layer.maybe_init_state(
             self.engine, {"x": x0, "y": y0, "u": gx, "v": gy})
+        obs0 = self.telemetry.init_counters() if self.telemetry else None
         return HSGDState(x0, y0, _copy_tree(x0), jnp.copy(y0), gx, gy,
-                         jnp.zeros((), jnp.int32), comm0)
+                         jnp.zeros((), jnp.int32), comm0, obs0)
 
     def step(self, state: HSGDState, batch: Any) -> tuple[HSGDState, StepMetrics]:
         h = self.hyper
         mix, comm_final = comms_layer.make_mixer(
             self.gossip, self.engine, state.comm, state.step,
             backend=self.backend)
+        mix, obs_final = obs_wire.wrap_mixer(
+            mix, state.obs, self.gossip, self.engine, self.backend,
+            state.comm, state.step)
         loss, (gx_cur, gy_cur) = _euclid_grads(self.problem, state.x, state.y, batch)
         _, (gx_old, gy_old) = _euclid_grads(self.problem, state.x_prev, state.y_prev, batch)
 
@@ -196,12 +217,15 @@ class DMHSGD:
         y_new = jax.vmap(self.problem.project_y)(
             mix("y", state.y, 1) + h.eta * dy)
 
+        obs_new = obs_final()
+        if self.telemetry is not None:
+            self.telemetry.flush_counters(obs_new, state.step + 1)
         new = HSGDState(x_new, y_new, state.x, state.y, dx, dy, state.step + 1,
-                        comm_final())
+                        comm_final(), obs_new)
         return new, _metrics(loss, gx_cur, gy_cur, x_new, y_new, dx)
 
     def make_step(self, donate: bool = True):
-        return jax.jit(self.step, donate_argnums=(0,) if donate else ())
+        return make_obs_step(self.step, self.telemetry, donate=donate)
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +246,7 @@ class SRVRState(NamedTuple):
     gy_est_prev: Array
     step: Array
     comm: Any = None
+    obs: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -243,25 +268,32 @@ class GTSRVR:
     deterministic = False
 
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
-                 hyper: SRVRHyper = SRVRHyper()):
+                 hyper: SRVRHyper = SRVRHyper(), telemetry=None):
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
         self.backend = comms_layer.resolve_backend(gossip)
         self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
+        self.telemetry = telemetry if telemetry is not None \
+            and telemetry.enabled else None
 
     def init(self, x0: PyTree, y0: Array, anchor_batch: Any) -> SRVRState:
+        x0, y0 = _strong(x0), _strong(y0)
         _, (gx, gy) = _euclid_grads(self.problem, x0, y0, anchor_batch)
         cp = _copy_tree
         comm0 = comms_layer.maybe_init_state(
             self.engine, {"x": x0, "y": y0, "u": gx, "v": gy})
+        obs0 = self.telemetry.init_counters() if self.telemetry else None
         return SRVRState(x0, y0, cp(x0), jnp.copy(y0), gx, gy,
                          cp(gx), jnp.copy(gy), cp(gx), jnp.copy(gy),
-                         jnp.zeros((), jnp.int32), comm0)
+                         jnp.zeros((), jnp.int32), comm0, obs0)
 
     def _update_params(self, state: SRVRState, gx_est, gy_est):
         h = self.hyper
         mix, comm_final = comms_layer.make_mixer(
             self.gossip, self.engine, state.comm, state.step,
             backend=self.backend)
+        mix, obs_final = obs_wire.wrap_mixer(
+            mix, state.obs, self.gossip, self.engine, self.backend,
+            state.comm, state.step)
         u_new = jax.tree.map(lambda mu, g, gp: mu + g - gp,
                              mix("u", state.u, 1), gx_est, state.gx_est_prev)
         v_new = mix("v", state.v, 1) + gy_est - state.gy_est_prev
@@ -270,13 +302,16 @@ class GTSRVR:
         x_new = _project_back(self.problem.manifold_map, x_new, h.invsqrt)
         y_new = jax.vmap(self.problem.project_y)(
             mix("y", state.y, 1) + h.eta * v_new)
-        return x_new, y_new, u_new, v_new, comm_final()
+        obs_new = obs_final()
+        if self.telemetry is not None:
+            self.telemetry.flush_counters(obs_new, state.step + 1)
+        return x_new, y_new, u_new, v_new, comm_final(), obs_new
 
     def anchor_step(self, state: SRVRState, anchor_batch: Any):
         loss, (gx, gy) = _euclid_grads(self.problem, state.x, state.y, anchor_batch)
-        x_new, y_new, u_new, v_new, comm = self._update_params(state, gx, gy)
+        x_new, y_new, u_new, v_new, comm, obs = self._update_params(state, gx, gy)
         new = SRVRState(x_new, y_new, state.x, state.y, gx, gy, u_new, v_new,
-                        gx, gy, state.step + 1, comm)
+                        gx, gy, state.step + 1, comm, obs)
         return new, _metrics(loss, gx, gy, x_new, y_new, u_new)
 
     def step(self, state: SRVRState, batch: Any):
@@ -286,15 +321,19 @@ class GTSRVR:
         gx_est = jax.tree.map(lambda g, go, e: e + g - go,
                               gx_cur, gx_old, state.gx_est)
         gy_est = state.gy_est + gy_cur - gy_old
-        x_new, y_new, u_new, v_new, comm = self._update_params(
+        x_new, y_new, u_new, v_new, comm, obs = self._update_params(
             state, gx_est, gy_est)
         new = SRVRState(x_new, y_new, state.x, state.y, gx_est, gy_est,
-                        u_new, v_new, gx_est, gy_est, state.step + 1, comm)
+                        u_new, v_new, gx_est, gy_est, state.step + 1, comm, obs)
         return new, _metrics(loss, gx_cur, gy_cur, x_new, y_new, u_new)
 
     def make_step(self, donate: bool = True):
-        return (jax.jit(self.step, donate_argnums=(0,) if donate else ()),
-                jax.jit(self.anchor_step, donate_argnums=(0,) if donate else ()))
+        import itertools
+        shared = itertools.count(1)   # one flush cadence across both phases
+        return (make_obs_step(self.step, self.telemetry, donate=donate,
+                              counter=shared),
+                make_obs_step(self.anchor_step, self.telemetry, donate=donate,
+                              counter=shared))
 
 
 ALL_BASELINES = {c.name: c for c in (GTGDA, GNSDA, DMHSGD, GTSRVR)}

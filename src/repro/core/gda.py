@@ -41,6 +41,7 @@ Faithfulness notes
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -49,6 +50,7 @@ import jax.numpy as jnp
 from repro.comms import layer as comms_layer
 from repro.core.gossip import GossipSpec
 from repro.core.minimax import MinimaxProblem
+from repro.obs import wire as obs_wire
 
 Array = jax.Array
 PyTree = Any
@@ -77,6 +79,7 @@ class GDAState(NamedTuple):
     gy_prev: Array     # last grad_y
     step: Array        # scalar int32
     comm: Any = None   # comms_layer.CommState when GossipSpec.comm is enabled
+    obs: Any = None    # packed f32[6] counter leaf when telemetry is enabled
 
 
 class StepMetrics(NamedTuple):
@@ -96,7 +99,7 @@ class DecentralizedGDA:
     deterministic = True
 
     def __init__(self, problem: MinimaxProblem, gossip: GossipSpec,
-                 hyper: GDAHyper = GDAHyper()):
+                 hyper: GDAHyper = GDAHyper(), telemetry=None):
         from repro.geometry import base as _gbase
         self.problem = problem
         self.gossip = gossip
@@ -109,6 +112,10 @@ class DecentralizedGDA:
         # the optimizer math below never sees the difference
         self.backend = comms_layer.resolve_backend(gossip)
         self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
+        # static config captured by the jitted closure, like the engine;
+        # None (or enabled=False) compiles the exact pre-obs program
+        self.telemetry = telemetry if telemetry is not None \
+            and telemetry.enabled else None
 
     # -- initialization -----------------------------------------------------
     def init(self, x0: PyTree, y0: Array, batch0: Any) -> GDAState:
@@ -117,12 +124,14 @@ class DecentralizedGDA:
         ``u``/``gx_prev`` (and ``v``/``gy_prev``) start equal but must be
         DISTINCT buffers — the jitted step donates the whole state, and XLA
         rejects donating one buffer twice."""
+        x0, y0 = _strong(x0), _strong(y0)
         rgx, gy = jax.vmap(self.problem.rgrads)(x0, y0, batch0)
         comm0 = comms_layer.maybe_init_state(
             self.engine, {"x": x0, "y": y0, "u": rgx, "v": gy})
+        obs0 = self.telemetry.init_counters() if self.telemetry else None
         return GDAState(x=x0, y=y0, u=rgx, v=gy,
                         gx_prev=_copy_tree(rgx), gy_prev=jnp.copy(gy),
-                        step=jnp.zeros((), jnp.int32), comm=comm0)
+                        step=jnp.zeros((), jnp.int32), comm=comm0, obs=obs0)
 
     # -- one step -----------------------------------------------------------
     def step(self, state: GDAState, batch: Any) -> tuple[GDAState, StepMetrics]:
@@ -130,6 +139,9 @@ class DecentralizedGDA:
         mix, comm_final = comms_layer.make_mixer(
             self.gossip, self.engine, state.comm, state.step,
             backend=self.backend)
+        mix, obs_final = obs_wire.wrap_mixer(
+            mix, state.obs, self.gossip, self.engine, self.backend,
+            state.comm, state.step)
 
         # ---- step 4: Riemannian consensus + tracked descent on x ----------
         mixed_x = mix("x", state.x, k)
@@ -161,9 +173,13 @@ class DecentralizedGDA:
                              mix("u", state.u, k), rgx_new, state.gx_prev)
         v_new = mix("v", state.v, 1) + gy_new - state.gy_prev
 
+        obs_new = obs_final()
+        if self.telemetry is not None:
+            self.telemetry.flush_counters(obs_new, state.step + 1)
         new_state = GDAState(x=x_new, y=y_new, u=u_new, v=v_new,
                              gx_prev=rgx_new, gy_prev=gy_new,
-                             step=state.step + 1, comm=comm_final())
+                             step=state.step + 1, comm=comm_final(),
+                             obs=obs_new)
         metrics = StepMetrics(
             loss=jnp.mean(loss_new),
             grad_norm_x=_tree_mean_norm(rgx_new),
@@ -177,7 +193,7 @@ class DecentralizedGDA:
 
     def make_step(self, donate: bool = True) -> Callable:
         """jitted step closure (state, batch) -> (state, metrics)."""
-        return jax.jit(self.step, donate_argnums=(0,) if donate else ())
+        return make_obs_step(self.step, self.telemetry, donate=donate)
 
 
 class DRGDA(DecentralizedGDA):
@@ -205,8 +221,52 @@ class DRSGDA(DecentralizedGDA):
 # ---------------------------------------------------------------------------
 
 
+def make_obs_step(step_fn: Callable, telemetry, donate: bool = True,
+                  counter=None) -> Callable:
+    """jit ``step_fn`` with the telemetry flush hoisted to host cadence.
+
+    A jitted program containing an io_callback loses fast-path dispatch on
+    EVERY call, even when a ``lax.cond`` guards the callback — so with
+    telemetry on we compile two executables from the same trace: a quiet
+    effect-free one (ordinary steps, async dispatch intact) and a flushing
+    one routed to every ``flush_every``-th call by a host-side counter.
+    Both are fully fused; the math is identical (test-enforced bit
+    identity).  ``counter`` shares one cadence across multiple step
+    functions (GT-SRVR's step + anchor_step).
+    """
+    donate_args = (0,) if donate else ()
+    if telemetry is None:
+        return jax.jit(step_fn, donate_argnums=donate_args)
+
+    def stepper(state, batch, flush: bool):
+        with telemetry.flush_mode("always" if flush else "never"):
+            return step_fn(state, batch)
+
+    jitted = jax.jit(stepper, static_argnums=(2,), donate_argnums=donate_args)
+    counter = counter if counter is not None else itertools.count(1)
+
+    def run(state, batch):
+        # flush on the very first call too: it compiles the flushing
+        # executable up front (no mid-run compile stall at step flush_every)
+        # and doubles as a telemetry-alive record
+        n = next(counter)
+        return jitted(state, batch,
+                      n == 1 or n % telemetry.flush_every == 0)
+
+    return run
+
+
 def _copy_tree(tree: PyTree) -> PyTree:
     return jax.tree.map(jnp.copy, tree)
+
+
+def _strong(tree: PyTree) -> PyTree:
+    """Strip weak types from user-supplied init leaves (e.g. a
+    ``jnp.full(..., 1.0/G)`` y0).  A weak-typed leaf in the init state gives
+    the jitted step different input avals on call one vs call two — i.e. a
+    silent second compile mid-training."""
+    return jax.tree.map(lambda l: jnp.asarray(l).astype(jnp.asarray(l).dtype),
+                        tree)
 
 
 def _vmapped_loss_and_rgrads(problem: MinimaxProblem, x, y, batch):

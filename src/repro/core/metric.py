@@ -83,6 +83,23 @@ def convergence_metric(problem: MinimaxProblem, x_stacked: PyTree,
     }
 
 
+def per_leaf_drift(problem: MinimaxProblem, x_stacked: PyTree,
+                   method: str = "eigh") -> dict[str, Array]:
+    """Cross-node drift per leaf: mean_i dist(x_i, x_hat) under each leaf's
+    own geometry (principal angles on Grassmann, chordal on Stiefel, ...).
+    Keys are '/'-joined leaf paths — the telemetry dashboard streams these
+    next to the Euclidean consensus term of M_t."""
+    out: dict[str, Array] = {}
+    m_leaves = jax.tree_util.tree_flatten_with_path(problem.manifold_map)[0]
+    x_leaves = jax.tree.leaves(x_stacked)
+    for (path, m), xs in zip(m_leaves, x_leaves):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path) or "param"
+        x_hat = m.consensus_mean(xs, method=method)
+        out[name] = jnp.mean(jax.vmap(lambda xi: m.dist(xi, x_hat))(xs))
+    return out
+
+
 def _feasibility_residual(problem: MinimaxProblem, x_stacked: PyTree) -> Array:
     errs = [jnp.max(m.check(xs))
             for m, xs in zip(jax.tree.leaves(problem.manifold_map),

@@ -22,12 +22,17 @@ from repro.kernels import ref
 from repro.kernels import retract as _rt
 from repro.kernels import ring_mix as _rm
 from repro.kernels import stiefel_project as _sp
+from repro.obs import estimates as _est
 
 Array = jax.Array
 
 
 def _default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _itemsize(x: Array) -> int:
+    return jnp.dtype(x.dtype).itemsize
 
 
 # ---------------------------------------------------------------------------
@@ -55,6 +60,10 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     block_kv: int = _fa.DEFAULT_BLOCK_KV) -> Array:
     """Attention over (B, S, H, hd) q and (B, T, Hkv, hd) k/v."""
     impl = impl or _default_impl()
+    _est.record("flash_attention", _est.flash_attention_est(
+        q.shape[0], q.shape[1], k.shape[1], q.shape[2], q.shape[3],
+        causal=causal, window=window, block_q=block_q,
+        itemsize=_itemsize(q)))
     if impl == "ref":
         return ref.blockwise_attention(
             q, k, v, causal=causal, window=window, q_positions=q_positions,
@@ -100,6 +109,9 @@ def stiefel_project(x: Array, g: Array, *, impl: str | None = None,
                     block_d: int = _sp.DEFAULT_BLOCK_D) -> Array:
     """P_{T_x}(g) over the last two dims; leading dims are vmapped."""
     impl = impl or _default_impl()
+    d, r = x.shape[-2:]
+    _est.record("stiefel_project", _est.stiefel_project_est(
+        d, r, lead=max(1, x.size // (d * r)), itemsize=_itemsize(x)))
     if impl == "ref":
         return ref.stiefel_project_ref(x, g)
 
@@ -140,6 +152,10 @@ def fused_retract(x: Array, g: Array, *, ns_iters: int = _rt.DEFAULT_NS_ITERS,
     projection happens inside the kernel (GDAHyper.retraction="polar_fused").
     """
     impl = impl or _default_impl()
+    d, r = x.shape[-2:]
+    _est.record("fused_retract", _est.fused_retract_est(
+        d, r, ns_iters=ns_iters, lead=max(1, x.size // (d * r)),
+        itemsize=_itemsize(x)))
     if impl == "ref":
         return ref.fused_retract_ref(x, g, ns_iters=ns_iters)
 
@@ -184,6 +200,8 @@ def ring_mix(x_self: Array, x_left: Array, x_right: Array, *,
     costs at most 7 padded rows.
     """
     impl = impl or _default_impl()
+    _est.record("ring_mix",
+                _est.ring_mix_est(x_self.size, itemsize=_itemsize(x_self)))
     if impl == "ref":
         return ref.ring_mix_ref(x_self, x_left, x_right, w_self, w_side)
 
@@ -234,6 +252,9 @@ def quant_mix(q_self: Array, q_left: Array, q_right: Array,
     """
     impl = impl or _default_impl()
     rows = q_self.shape[0]
+    _est.record("quant_mix", _est.quant_mix_est(
+        rows, q_self.size // rows,
+        out_itemsize=jnp.dtype(out_dtype).itemsize))
     scales = [s.reshape(rows, 1) for s in (s_self, s_left, s_right)]
     if impl == "ref":
         out = ref.quant_mix_ref(

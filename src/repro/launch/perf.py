@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
-    or "--xla_force_host_platform_device_count=512")
-
 """§Perf hillclimb driver.
 
 Each experiment = (base arch × shape × mesh) + a list of named config
@@ -12,18 +7,40 @@ record to experiments/perf/<name>.json.  The narrative
 hypothesis → change → before → after lives in EXPERIMENTS.md §Perf.
 
 Run:  PYTHONPATH=src python -m repro.launch.perf --exp deepseek_moe
+
+The many-host-device XLA override only applies on the ``__main__`` driver
+path (see :func:`_set_dryrun_xla_flags`) — importing this module never
+touches the environment, and a user-set ``XLA_FLAGS`` always wins.
 """
-import argparse      # noqa: E402
-import dataclasses   # noqa: E402
-import json          # noqa: E402
-import sys           # noqa: E402
-import time          # noqa: E402
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
 
-import jax.numpy as jnp                       # noqa: E402
+import jax.numpy as jnp
 
-from repro import configs                     # noqa: E402
-from repro.configs.base import INPUT_SHAPES, MeshPlan, MoESpec  # noqa: E402
-from repro.launch import dryrun_lib, roofline  # noqa: E402
+from repro import configs
+from repro.configs.base import INPUT_SHAPES, MeshPlan, MoESpec  # noqa: F401
+from repro.launch import dryrun_lib, roofline
+
+#: default driver-path flags — the dry-run fakes a 512-device host platform
+DEFAULT_DRYRUN_XLA_FLAGS = "--xla_force_host_platform_device_count=512"
+
+
+def _set_dryrun_xla_flags() -> str:
+    """Install the dry-run device-count flags, driver path only.
+
+    Precedence: an existing ``XLA_FLAGS`` is left untouched (the user knows
+    best), else ``REPRO_DRYRUN_XLA_FLAGS``, else the 512-device default.
+    Must run before the first ``jax`` backend initialization to take effect.
+    """
+    if not os.environ.get("XLA_FLAGS"):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+            or DEFAULT_DRYRUN_XLA_FLAGS)
+    return os.environ["XLA_FLAGS"]
 
 
 def analyze(cfg, shape_name: str, mesh_kind: str = "single", *,
@@ -175,4 +192,5 @@ def main(argv=None) -> int:
 
 
 if __name__ == "__main__":
+    _set_dryrun_xla_flags()
     sys.exit(main())

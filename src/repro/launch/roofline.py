@@ -1,10 +1,11 @@
 """Roofline term derivation from compiled dry-run artifacts.
 
-Three terms per (arch x shape x mesh), v5e constants:
+Three terms per (arch x shape x mesh), on a selectable hardware model
+(default TPU v5e):
 
-  compute_s    = FLOPs_per_device / 197e12        (bf16 MXU peak)
-  memory_s     = bytes_per_device / 819e9         (HBM bandwidth)
-  collective_s = collective_bytes_per_device / 50e9  (ICI, ~50 GB/s/link)
+  compute_s    = FLOPs_per_device / hw.peak_flops    (bf16 MXU peak)
+  memory_s     = bytes_per_device / hw.hbm_bw        (HBM bandwidth)
+  collective_s = collective_bytes_per_device / hw.ici_bw  (ICI, per link)
 
 FLOPs / bytes come from ``compiled.cost_analysis()`` of the SPMD-partitioned
 per-device module.  Collective bytes are NOT in cost_analysis: we parse the
@@ -13,17 +14,76 @@ all-reduce / reduce-scatter / all-to-all / collective-permute (counting the
 per-device payload each op moves over the interconnect once — a deliberate
 first-order model; ring reductions move ~2x, which we note rather than
 model).
+
+Pick the hardware with ``REPRO_HW=tpu_v4|tpu_v5e|tpu_v5p`` (or pass a
+:class:`HardwareModel` / registry name explicitly to the entry points);
+:func:`place` positions any :class:`repro.obs.Estimates` on that roofline.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import re
 from typing import Optional
 
-PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
-HBM_BW = 819e9               # bytes/s / chip
-ICI_BW = 50e9                # bytes/s / link
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Peak numbers of one accelerator chip for roofline placement."""
+    name: str
+    peak_flops: float   # bf16 FLOP/s per chip
+    hbm_bw: float       # HBM bytes/s per chip
+    ici_bw: float       # interconnect bytes/s per link
+
+    @property
+    def ridge_intensity(self) -> float:
+        """FLOP/byte above which a kernel is compute-bound on this chip."""
+        return self.peak_flops / self.hbm_bw
+
+
+#: published per-chip peaks (bf16), keyed by the ``REPRO_HW`` names
+HARDWARE = {
+    "tpu_v4": HardwareModel("tpu_v4", peak_flops=275e12, hbm_bw=1.2e12,
+                            ici_bw=50e9),
+    "tpu_v5e": HardwareModel("tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                             ici_bw=50e9),
+    "tpu_v5p": HardwareModel("tpu_v5p", peak_flops=459e12, hbm_bw=2.77e12,
+                             ici_bw=100e9),
+}
+
+DEFAULT_HW = "tpu_v5e"
+
+
+def get_hardware(name: Optional[str] = None) -> HardwareModel:
+    """Resolve a hardware model: explicit name > ``REPRO_HW`` env > v5e."""
+    name = name or os.environ.get("REPRO_HW") or DEFAULT_HW
+    if name not in HARDWARE:
+        raise ValueError(f"unknown hardware model {name!r}; "
+                         f"choose from {sorted(HARDWARE)}")
+    return HARDWARE[name]
+
+
+def place(est, hw: Optional[HardwareModel] = None) -> dict:
+    """Place an analytical kernel estimate (``repro.obs.Estimates`` or any
+    object with ``ops``/``mem``/``intensity``) on ``hw``'s roofline."""
+    hw = hw or get_hardware()
+    attainable = min(hw.peak_flops, hw.hbm_bw * max(est.intensity, 0.0))
+    return {
+        "hw": hw.name,
+        "intensity": est.intensity,
+        "ridge_intensity": hw.ridge_intensity,
+        "bound": "compute" if est.intensity >= hw.ridge_intensity else "memory",
+        "attainable_flops": attainable,
+        "time_s": est.ops / attainable if attainable > 0 else 0.0,
+    }
+
+
+# legacy module-level v5e constants — RooflineTerms defaults route through
+# get_hardware() now; these remain for external readers of the old API
+PEAK_FLOPS = HARDWARE[DEFAULT_HW].peak_flops
+HBM_BW = HARDWARE[DEFAULT_HW].hbm_bw
+ICI_BW = HARDWARE[DEFAULT_HW].ici_bw
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -109,18 +169,23 @@ class RooflineTerms:
     collective_bytes_per_dev: float
     collective_breakdown: dict
     chips: int
+    hw: Optional[HardwareModel] = None   # None -> get_hardware() (env/default)
+
+    @property
+    def _hw(self) -> HardwareModel:
+        return self.hw or get_hardware()
 
     @property
     def compute_s(self) -> float:
-        return self.flops_per_dev / PEAK_FLOPS
+        return self.flops_per_dev / self._hw.peak_flops
 
     @property
     def memory_s(self) -> float:
-        return self.bytes_per_dev / HBM_BW
+        return self.bytes_per_dev / self._hw.hbm_bw
 
     @property
     def collective_s(self) -> float:
-        return self.collective_bytes_per_dev / ICI_BW
+        return self.collective_bytes_per_dev / self._hw.ici_bw
 
     @property
     def dominant(self) -> str:
@@ -135,6 +200,7 @@ class RooflineTerms:
             "collective_bytes_per_dev": self.collective_bytes_per_dev,
             "collective_breakdown": self.collective_breakdown,
             "chips": self.chips,
+            "hw": self._hw.name,
             "compute_s": self.compute_s,
             "memory_s": self.memory_s,
             "collective_s": self.collective_s,
@@ -142,7 +208,8 @@ class RooflineTerms:
         }
 
 
-def derive(compiled, chips: int) -> RooflineTerms:
+def derive(compiled, chips: int,
+           hw: Optional[HardwareModel] = None) -> RooflineTerms:
     ca = compiled.cost_analysis() or {}
     if isinstance(ca, list):             # some backends return [dict]
         ca = ca[0] if ca else {}
@@ -156,6 +223,7 @@ def derive(compiled, chips: int) -> RooflineTerms:
         collective_bytes_per_dev=float(sum(cb.values())),
         collective_breakdown=cb,
         chips=chips,
+        hw=hw,
     )
 
 

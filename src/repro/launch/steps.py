@@ -27,7 +27,7 @@ PyTree = Any
 def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
                   hyper: Optional[GDAHyper] = None, topology: str = "ring",
                   dtype=jnp.float32, mesh=None,
-                  mix_backend: Optional[str] = None):
+                  mix_backend: Optional[str] = None, telemetry=None):
     """Returns (opt, problem).  Default hyper uses k=1 gossip per step (the
     paper's experimental regime); pass k_override=None-in-spec via
     GossipSpec(k_steps=None) + hyper k_override to use the Theorem-1 k.
@@ -37,6 +37,10 @@ def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
     has more than one device, "auto"/"shard_map" route every mix through
     ``repro.comms.backend.ShardMapBackend`` — neighbour-shard ppermute
     exchange instead of stacked roll/einsum mixing.
+
+    ``telemetry`` (a ``repro.obs.Telemetry`` or None) threads wire counters
+    through the optimizer state and flushes them via io_callback; None
+    compiles the identical pre-obs program.
     """
     from repro.comms.backend import make_backend
     from repro.launch.mesh import gossip_axes
@@ -50,7 +54,7 @@ def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
     gossip = GossipSpec(topology=topology, n_nodes=n_nodes, k_steps=1,
                         comm=cfg.comm_spec(), backend=backend)
     hyper = hyper or GDAHyper(alpha=0.5, beta=0.02, eta=0.05)
-    opt = OPTIMIZERS[optimizer](problem, gossip, hyper)
+    opt = OPTIMIZERS[optimizer](problem, gossip, hyper, telemetry=telemetry)
     return opt, problem
 
 

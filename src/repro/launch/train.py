@@ -28,6 +28,14 @@ from repro.core.gda import GDAHyper
 from repro.core.metric import convergence_metric
 from repro.data.synthetic import TokenStream
 from repro.launch.steps import build_trainer, init_train_state
+from repro.obs import Telemetry
+
+
+def _span(telemetry, name, **tags):
+    import contextlib
+    if telemetry is None:
+        return contextlib.nullcontext()
+    return telemetry.span(name, **tags)
 
 
 def main(argv=None) -> int:
@@ -51,12 +59,26 @@ def main(argv=None) -> int:
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-json", default="")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="thread wire counters through the jitted step and "
+                         "stream the convergence dashboard to an event log")
+    ap.add_argument("--telemetry-dir", default="experiments/telemetry")
+    ap.add_argument("--telemetry-run", default="",
+                    help="run name for the event log / trace files "
+                         "(default: <optimizer>-<arch>)")
     args = ap.parse_args(argv)
+
+    telemetry = None
+    if args.telemetry:
+        telemetry = Telemetry(
+            run=args.telemetry_run or f"{args.optimizer}-{args.arch}",
+            out_dir=args.telemetry_dir, flush_every=args.eval_every)
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     hyper = GDAHyper(alpha=args.alpha, beta=args.beta, eta=args.eta)
     opt, problem = build_trainer(cfg, args.nodes, optimizer=args.optimizer,
-                                 hyper=hyper, topology=args.topology)
+                                 hyper=hyper, topology=args.topology,
+                                 telemetry=telemetry)
 
     stream = TokenStream(n_nodes=args.nodes, batch_per_node=args.batch_per_node,
                          seq_len=args.seq_len, vocab_size=cfg.vocab_size,
@@ -73,32 +95,43 @@ def main(argv=None) -> int:
         return out
 
     batch0 = to_jax(stream.batch(0))
-    state = init_train_state(jax.random.PRNGKey(args.seed), cfg, opt,
-                             args.nodes, batch0)
+    with _span(telemetry, "init"):
+        state = init_train_state(jax.random.PRNGKey(args.seed), cfg, opt,
+                                 args.nodes, batch0)
     step_fn = opt.make_step(donate=True)
 
     history = []
     t_start = time.time()
-    for t in range(args.steps):
-        batch = to_jax(stream.batch(t + 1))
-        state, metrics = step_fn(state, batch)
-        if (t + 1) % args.eval_every == 0 or t == args.steps - 1:
-            m = convergence_metric(problem, state.x, state.y, batch)
-            row = {
-                "step": t + 1,
-                "loss": float(metrics.loss),
-                "grad_norm_x": float(metrics.grad_norm_x),
-                "consensus_x": float(metrics.consensus_x),
-                "M_t": float(m["M_t"]),
-                "stiefel_residual": float(m["stiefel_residual"]),
-                "wall_s": round(time.time() - t_start, 1),
-            }
-            history.append(row)
-            print(json.dumps(row), flush=True)
-        if args.checkpoint_every and (t + 1) % args.checkpoint_every == 0 \
-                and args.checkpoint_dir:
-            checkpoint.save(args.checkpoint_dir, t + 1, state.x)
+    with _span(telemetry, "train", steps=args.steps):
+        for t in range(args.steps):
+            batch = to_jax(stream.batch(t + 1))
+            state, metrics = step_fn(state, batch)
+            if (t + 1) % args.eval_every == 0 or t == args.steps - 1:
+                with _span(telemetry, "eval", step=t + 1):
+                    m = convergence_metric(problem, state.x, state.y, batch)
+                row = {
+                    "step": t + 1,
+                    "loss": float(metrics.loss),
+                    "grad_norm_x": float(metrics.grad_norm_x),
+                    "consensus_x": float(metrics.consensus_x),
+                    "M_t": float(m["M_t"]),
+                    "stiefel_residual": float(m["stiefel_residual"]),
+                    "wall_s": round(time.time() - t_start, 1),
+                }
+                history.append(row)
+                print(json.dumps(row), flush=True)
+                if telemetry is not None:
+                    telemetry.dashboard(problem, state.x, state.y, batch,
+                                        step=t + 1,
+                                        extra={"loss": row["loss"]})
+            if args.checkpoint_every and (t + 1) % args.checkpoint_every == 0 \
+                    and args.checkpoint_dir:
+                with _span(telemetry, "checkpoint", step=t + 1):
+                    checkpoint.save(args.checkpoint_dir, t + 1, state.x)
 
+    if telemetry is not None:
+        paths = telemetry.export()
+        print(json.dumps({"telemetry": paths}), flush=True)
     if args.log_json:
         with open(args.log_json, "w") as f:
             json.dump(history, f, indent=1)

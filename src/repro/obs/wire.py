@@ -1,0 +1,138 @@
+"""jit-safe wire counters, threaded as an optimizer-state leaf.
+
+``WireCounters`` is a NamedTuple of scalars that rides through the jitted
+step exactly like ``CommState`` does: the optimizers thread it via
+:func:`wrap_mixer`, which intercepts every ``mix(slot, tree, steps)`` call
+and accumulates
+
+* static accounting — bytes per hop from the backend's ``est_hop_bytes``
+  (the same oracle ``benchmarks/mix_backend.py`` reports, so counter-derived
+  bytes/hop and the bench's estimates agree by construction) and, under a
+  ``CommEngine``, the compressed-round bytes from
+  ``CommEngine.wire_round_bytes`` (payload fan-out + exact hat hops);
+* dynamic accounting — per-hop link activity under a non-trivial
+  ``ChannelModel``: the same ``W_t`` draws the mix consumes are re-derived
+  from the engine's key schedule (``CommEngine.chan_key``) and reduced to
+  scheduled/active link counts (``ChannelModel.link_stats``), so dropped
+  links and the effective wire bytes are *traced* values.
+
+Counters never feed back into the update math — a trajectory with obs on is
+bit-identical to obs off (test-enforced).  The threaded leaf is one packed
+``f32[6]`` vector, not six scalar leaves: a single extra jit argument /
+output / donated buffer and one fused vector-add per mix call keeps the
+per-step dispatch overhead near zero.  :class:`WireCounters` is the
+host-side unpacked view (:func:`unpack`).  Everything accumulates in f32 —
+counts stay exact below 2**24 (ample for the covered run lengths); flush
+windows reset nothing, the counters are cumulative and readers difference
+consecutive flushes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+class WireCounters(NamedTuple):
+    """Host-side view of the packed counter vector (see :func:`unpack`)."""
+    rounds: Any            # int — mix() calls (one slot, any number of hops)
+    hops: Any              # int — gossip hops executed
+    wire_bytes: Any        # float — bytes actually put on the wire
+    raw_bytes: Any         # float — bytes a full-precision exchange would move
+    active_links: Any      # float — (link, hop) pairs that carried payload
+    dropped_links: Any     # float — scheduled (link, hop) pairs lost to faults
+
+    def as_dict(self) -> dict:
+        return {k: v for k, v in zip(self._fields, self)}
+
+
+N_COUNTERS = len(WireCounters._fields)
+_INT_FIELDS = ("rounds", "hops")
+
+
+def zero_counters() -> Array:
+    """The packed ``f32[6]`` counter leaf (one buffer — donation-friendly)."""
+    return jnp.zeros((N_COUNTERS,), jnp.float32)
+
+
+def unpack(counters) -> WireCounters:
+    """Packed vector (device array or numpy) -> typed host view."""
+    vals = np.asarray(counters)
+    return WireCounters(*(
+        int(v) if f in _INT_FIELDS else float(v)
+        for f, v in zip(WireCounters._fields, vals)))
+
+
+def static_link_count(spec) -> float:
+    """Undirected edges of the topology graph (off-diagonal support of W)."""
+    w = np.asarray(spec.matrix)
+    off = (w - np.diag(np.diag(w))) > 0
+    return float(np.count_nonzero(off)) / 2.0
+
+
+def account_mix(counters: Array, gossip, engine, backend,
+                comm_state, slot: str, tree: PyTree, steps: int,
+                rnd) -> Array:
+    """Packed counters after one ``mix(slot, tree, steps)`` call."""
+    if gossip.n_nodes == 1 or steps == 0:
+        return counters
+    n_links = static_link_count(gossip)
+    sched = float(steps) * n_links
+    per_hop = backend.est_hop_bytes(gossip, tree)
+    raw = float(steps) * per_hop
+
+    if engine is None:
+        wire: Array | float = raw
+        active: Array | float = sched
+        dropped: Array | float = 0.0
+    else:
+        wire, raw = engine.wire_round_bytes(tree, steps)
+        if engine.channel.trivial:
+            active, dropped = sched, 0.0
+        else:
+            k_chan = engine.chan_key(comm_state, slot, rnd)
+            sched_t = jnp.zeros((), jnp.float32)
+            act_t = jnp.zeros((), jnp.float32)
+            for h in range(steps):
+                s_h, a_h = engine.channel.link_stats(
+                    rnd * steps + h, jax.random.fold_in(k_chan, h))
+                sched_t += s_h
+                act_t += a_h
+            # faulty links carry nothing: scale the wire estimate by the
+            # realized active-link fraction (first-order, uniform links)
+            wire = wire * act_t / jnp.maximum(sched_t, 1.0)
+            active, dropped = act_t, sched_t - act_t
+
+    # one fused vector-add per mix call (order = WireCounters._fields)
+    delta = jnp.stack([jnp.float32(1.0), jnp.float32(steps),
+                       jnp.float32(wire), jnp.float32(raw),
+                       jnp.float32(active), jnp.float32(dropped)])
+    return counters + delta
+
+
+def wrap_mixer(mix: Callable[[str, PyTree, int], PyTree],
+               counters: Optional[Array], gossip, engine, backend,
+               comm_state, rnd
+               ) -> tuple[Callable[[str, PyTree, int], PyTree],
+                          Callable[[], Optional[Array]]]:
+    """Instrument a ``make_mixer`` mix function with wire accounting.
+
+    Returns ``(mix2, counters_final)``; with ``counters is None`` the mix is
+    returned untouched (telemetry off costs nothing).
+    """
+    if counters is None:
+        return mix, lambda: None
+    box = {"c": counters}
+
+    def mix2(slot: str, tree: PyTree, steps: int) -> PyTree:
+        out = mix(slot, tree, steps)
+        box["c"] = account_mix(box["c"], gossip, engine, backend,
+                               comm_state, slot, tree, steps, rnd)
+        return out
+
+    return mix2, lambda: box["c"]
