@@ -160,18 +160,60 @@ def telemetry_section(obs: dict | None) -> str:
     return "\n".join(out)
 
 
-def load_obs() -> dict | None:
-    path = os.path.join(ROOT, "experiments", "bench", "obs.json")
+def autotune_section(tune: dict | None) -> str:
+    """§Autotune from experiments/bench/tune.json (and the live cache):
+    tuned vs default launch configs per kernel/shape.  Empty string when
+    the tune bench hasn't run."""
+    if not tune or not tune.get("rows"):
+        return ""
+    out = ["## §Autotune\n"]
+    out.append(
+        "`benchmarks/run.py tune` — measure-or-load over each kernel's\n"
+        "launch-config space (`repro.kernels.tune`), accuracy-gated where\n"
+        "the config changes math (`ns_iters`, rtol 1e-5), 5% hysteresis vs\n"
+        "the default, cached under `experiments/tune/<device>.json` keyed\n"
+        "on kernel|shape|dtype.  `REPRO_TUNE=off|load|search`; delete the\n"
+        "cache dir to retune.\n")
+    out.append("| kernel | shape | tuned config | default config | "
+               "tuned us | default us | speedup |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in tune["rows"]:
+        shape = "x".join(str(s) for s in r["shape"])
+        if r.get("extra"):
+            shape += " " + ",".join(f"{k}={v}"
+                                    for k, v in sorted(r["extra"].items()))
+        cfg = ", ".join(f"{k}={v}" for k, v in sorted(r["config"].items()))
+        dflt = ", ".join(f"{k}={v}"
+                         for k, v in sorted(r["default_config"].items()))
+        mark = "**" if r["config"] != r["default_config"] else ""
+        out.append(f"| {r['kernel']} | {shape} | {mark}{cfg}{mark} | {dflt} "
+                   f"| {r['best_us']:.1f} | {r['default_us']:.1f} "
+                   f"| {r['speedup_pct']:+.1f}% |")
+    if tune.get("searches") is not None:
+        out.append(f"\ncache searches recorded: {tune['searches']} "
+                   f"(unchanged on re-run — second invocation is pure load)")
+    out.append("")
+    return "\n".join(out)
+
+
+def _load_bench(name: str) -> dict | None:
+    path = os.path.join(ROOT, "experiments", "bench", f"{name}.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:
         return json.load(f)
 
 
-def build(recs, obs=None) -> str:
+def load_obs() -> dict | None:
+    return _load_bench("obs")
+
+
+def build(recs, obs=None, tune=None) -> str:
     text = dryrun_section(recs) + "\n" + roofline_section(recs)
-    tele = telemetry_section(obs)
-    return text + "\n" + tele if tele else text
+    for section in (telemetry_section(obs), autotune_section(tune)):
+        if section:
+            text += "\n" + section
+    return text
 
 
 if __name__ == "__main__":
@@ -180,7 +222,7 @@ if __name__ == "__main__":
                     help="rewrite the §Dry-run/§Roofline block in EXPERIMENTS.md")
     args = ap.parse_args()
     recs = load_records()
-    text = build(recs, obs=load_obs())
+    text = build(recs, obs=load_obs(), tune=_load_bench("tune"))
     if args.write:
         path = os.path.join(ROOT, "EXPERIMENTS.md")
         marker_a = "<!-- AUTOGEN:DRYRUN-ROOFLINE:BEGIN -->"

@@ -1,10 +1,14 @@
-"""Mix-backend benchmark: stacked vs shard_map gossip hops.
+"""Mix-backend benchmark: stacked vs shard_map (fused / unfused) gossip.
 
-For a sweep of per-node model sizes, times jitted ``W^k`` mixes under both
-backends on an 8-virtual-device node mesh and reports hops/sec plus each
-backend's *estimated bytes moved per hop* (the stacked roll ships every node
-row both ways — and dense topologies all-gather — where the shard_map ring
-ships only the two edge rows per device).
+For a sweep of per-node model sizes, times jitted ``W^k`` mixes under the
+stacked backend and BOTH shard_map schedules on an 8-virtual-device node
+mesh — ``shard_map`` is the fused halo-panel megakernel path (one Pallas
+launch for all k hops), ``shard_map_unfused`` the hop-by-hop schedule it
+replaced — and reports hops/sec plus each backend's *estimated bytes moved
+per hop*.  A second sweep holds the size at ``tiny_64k`` (where launch
+latency dominates and the fusion matters most) and scales the hop count
+k in {1, 2, 3, 5} for all three schedules.  The unfused column is ring-only:
+dense topologies take the all-gather path, identical under both flags.
 
 Because the device count must be forced before jax initializes, ``run()``
 re-executes this file in a worker subprocess with
@@ -29,7 +33,8 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 N_DEVICES = 8
 N_NODES = 16          # two node rows per device: only edge rows hit the wire
 STEPS = 3
-REPEATS = 30
+REPEATS = 6           # timed mixes per block
+BLOCKS = 5            # best-of-BLOCKS guards against host load spikes
 
 # per-node leaf layouts: (name, [(leaf shape sans node axis), ...])
 SIZES = [
@@ -51,34 +56,55 @@ def _worker() -> dict:
     mesh = Mesh(np.asarray(jax.devices())[:N_DEVICES].reshape(N_DEVICES),
                 ("node",))
     backends = {"stacked": StackedBackend(),
-                "shard_map": ShardMapBackend(mesh, axis="node")}
+                "shard_map": ShardMapBackend(mesh, axis="node", fuse="on"),
+                "shard_map_unfused": ShardMapBackend(mesh, axis="node",
+                                                     fuse="off")}
+
+    def _make_tree(leaf_shapes):
+        key = jax.random.PRNGKey(0)
+        return {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                           (N_NODES, *shp), jnp.float32)
+                for i, shp in enumerate(leaf_shapes)}
+
+    def _time_row(size, tree, topology, bname, be, k):
+        spec = GossipSpec(topology=topology, n_nodes=N_NODES, k_steps=k)
+        fn = jax.jit(lambda t, _be=be, _s=spec, _k=k: _be.mix(_s, t, _k))
+        out = jax.block_until_ready(fn(tree))       # compile + warm
+        dt = float("inf")
+        for _ in range(BLOCKS):
+            t0 = time.time()
+            for _ in range(REPEATS):
+                out = jax.block_until_ready(fn(out))
+            dt = min(dt, (time.time() - t0) / REPEATS)
+        params = sum(int(l.size) for l in jax.tree.leaves(tree)) // N_NODES
+        return {
+            "size": size, "params_per_node": params,
+            "topology": topology, "backend": bname, "k": k,
+            "us_per_mix": dt * 1e6,
+            "hops_per_sec": k / dt,
+            "est_bytes_per_hop": be.est_hop_bytes(spec, tree),
+        }
+
     rows = []
     t_all = time.time()
     for name, leaf_shapes in SIZES:
-        key = jax.random.PRNGKey(0)
-        tree = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
-                                           (N_NODES, *shp), jnp.float32)
-                for i, shp in enumerate(leaf_shapes)}
-        params = sum(int(l.size) for l in jax.tree.leaves(tree)) // N_NODES
+        tree = _make_tree(leaf_shapes)
         for topology in ("ring", "full"):
-            spec = GossipSpec(topology=topology, n_nodes=N_NODES,
-                              k_steps=STEPS)
             for bname, be in backends.items():
-                fn = jax.jit(lambda t, _be=be, _s=spec: _be.mix(_s, t, STEPS))
-                out = jax.block_until_ready(fn(tree))   # compile + warm
-                t0 = time.time()
-                for _ in range(REPEATS):
-                    out = jax.block_until_ready(fn(out))
-                dt = (time.time() - t0) / REPEATS
-                rows.append({
-                    "size": name, "params_per_node": params,
-                    "topology": topology, "backend": bname, "k": STEPS,
-                    "us_per_mix": dt * 1e6,
-                    "hops_per_sec": STEPS / dt,
-                    "est_bytes_per_hop": be.est_hop_bytes(spec, tree),
-                })
+                if bname == "shard_map_unfused" and topology != "ring":
+                    continue    # dense path is flag-independent
+                rows.append(_time_row(name, tree, topology, bname, be,
+                                      STEPS))
+    # hop-count sweep at the latency-dominated size: hops/sec vs k
+    sweep_tree = _make_tree(dict(SIZES)["tiny_64k"])
+    k_sweep = []
+    for k in (1, 2, 3, 5):
+        for bname, be in backends.items():
+            k_sweep.append(_time_row("tiny_64k", sweep_tree, "ring",
+                                     bname, be, k))
     return {"n_devices": N_DEVICES, "n_nodes": N_NODES,
-            "rows": rows, "us_total": (time.time() - t_all) * 1e6}
+            "rows": rows, "k_sweep": k_sweep,
+            "us_total": (time.time() - t_all) * 1e6}
 
 
 def run() -> dict:

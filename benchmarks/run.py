@@ -11,8 +11,12 @@ so regressions are visible across revisions without diffing payloads.
   consensus   — W^k contraction vs lambda_2^k theory; Stiefel consensus
   comms       — bits-per-parameter vs consensus error vs final M_t sweep
                 (EF-int8 / top-k / low-rank / naive; channel fault rates)
-  mix         — stacked vs shard_map backend: hops/sec + est bytes moved
-                per gossip hop across model sizes (8 virtual devices)
+  mix         — stacked vs shard_map (fused/unfused) backend: hops/sec +
+                est bytes moved per gossip hop across model sizes and hop
+                counts (8 virtual devices)
+  tune        — autotuned vs default Pallas launch configs on the demo
+                shapes (writes experiments/bench/tune.json; asserts the
+                second lookup is a pure cache load)
   geometry    — retraction micro-bench: fused kernel vs unfused NS vs eigh
                 (+ qr / cayley), node-stacked (d, r) sweep
   complexity  — Theorem-1 decay-rate sanity (log-log slope of M_t)
@@ -161,10 +165,50 @@ def bench_mix():
     ring = [r for r in rows if r["topology"] == "ring"]
     by = {r["backend"]: r for r in ring if r["size"] == "medium_2m"}
     sm, st = by["shard_map"], by["stacked"]
-    derived = (f"ring2m_shardmap_hps={sm['hops_per_sec']:.1f};"
+    tiny = {r["backend"]: r for r in ring if r["size"] == "tiny_64k"}
+    fused, unfused = tiny["shard_map"], tiny["shard_map_unfused"]
+    derived = (f"ring64k_fused_hps={fused['hops_per_sec']:.1f};"
+               f"ring64k_unfused_hps={unfused['hops_per_sec']:.1f};"
+               f"ring2m_shardmap_hps={sm['hops_per_sec']:.1f};"
                f"ring2m_stacked_hps={st['hops_per_sec']:.1f};"
                f"ring2m_bytes_ratio="
                f"{st['est_bytes_per_hop'] / max(sm['est_bytes_per_hop'], 1):.1f}")
+    return res["us_total"] / max(len(rows), 1), derived
+
+
+def bench_tune():
+    """Autotuned vs default launch configs on the demo shapes — searches on
+    a cache-miss, then proves the second lookup is a pure load."""
+    from repro.kernels import tune as ktune
+    os.environ["REPRO_TUNE"] = "search"
+    t0 = time.time()
+    rows = []
+    for name, shape, dtype, extra in ktune.DEMO_SHAPES:
+        entry = ktune.autotune(name, tuple(shape), dtype, extra=extra)
+        rows.append({
+            "kernel": name, "shape": list(shape), "dtype": dtype,
+            "extra": extra, "config": entry["config"],
+            "default_config": entry["default_config"],
+            "best_us": entry["best_us"], "default_us": entry["default_us"],
+            "speedup_pct": entry["speedup_pct"], "impl": entry["impl"],
+        })
+    searches = None
+    try:
+        with open(ktune.cache_path()) as f:
+            searches = json.load(f).get("searches")
+    except OSError:
+        pass
+    # round trip: every key must now serve from cache without re-searching
+    for name, shape, dtype, extra in ktune.DEMO_SHAPES:
+        assert ktune.lookup(name, tuple(shape), dtype, extra) is not None
+    res = {"rows": rows, "cache_path": ktune.cache_path(),
+           "searches": searches,
+           "us_total": (time.time() - t0) * 1e6}
+    _save("tune", res)
+    tuned = [r for r in rows if r["config"] != r["default_config"]]
+    derived = (f"n_kernels={len(rows)};n_nondefault={len(tuned)};"
+               + ";".join(f"{r['kernel']}_speedup_pct={r['speedup_pct']:.1f}"
+                          for r in rows))
     return res["us_total"] / max(len(rows), 1), derived
 
 
@@ -224,6 +268,7 @@ ALL = {
     "consensus": bench_consensus,
     "comms": bench_comms,
     "mix": bench_mix,
+    "tune": bench_tune,
     "geometry": bench_geometry,
     "complexity": bench_complexity,
     "roofline": bench_roofline,

@@ -88,8 +88,25 @@ class MixBackend(Protocol):
         Only the int8 bytes travel."""
         ...
 
+    def quant_ring_hops(self, spec, x: Array, steps: int, *,
+                        out_dtype=None) -> Array:
+        """``steps`` ring hops on one node-stacked leaf where EVERY hop is
+        int8-compressed: each hop deterministically requantizes its input
+        (round-to-nearest, per-node max-abs/127 scale) and combines the
+        dequantized values — so only int8 bytes (+ one f32 scale per row)
+        ever need to travel.  The requantization is part of the *math*, not
+        the layout: every backend decodes identical int8 values at every
+        hop, so results agree across backends to float-contraction (FMA)
+        rounding of the final combines — a few ulps."""
+        ...
+
     def est_hop_bytes(self, spec, tree: PyTree) -> float:
         """Estimated bytes moved device-to-device by one exact hop."""
+        ...
+
+    def est_quant_hop_bytes(self, spec, tree: PyTree) -> float:
+        """Estimated bytes moved by one int8-compressed hop of the
+        ``quant_ring_hops`` schedule (int8 payload + f32 scale per row)."""
         ...
 
 
@@ -132,6 +149,22 @@ class StackedBackend:
             scale, jnp.roll(scale, 1, 0), jnp.roll(scale, -1, 0),
             w_self=wc, w_side=ws, out_dtype=out_dtype)
 
+    def quant_ring_hops(self, spec, x: Array, steps: int, *,
+                        out_dtype=None) -> Array:
+        """Every hop requantizes deterministically and combines the decoded
+        values — the layout-independent oracle of the all-hop compressed
+        ``W^k`` schedule (what the shard_map megakernel fuses)."""
+        from repro.comms.compress import quantize_det
+        out_dtype = x.dtype if out_dtype is None else out_dtype
+        n = x.shape[0]
+        z = x
+        for _ in range(max(steps, 0)):
+            q, s = quantize_det(z)
+            z = self.quant_ring_hop(
+                spec, q.reshape(n, -1), s.reshape(n, 1),
+                out_dtype=jnp.float32).reshape(x.shape)
+        return z.astype(out_dtype)
+
     def est_hop_bytes(self, spec, tree: PyTree) -> float:
         total = _tree_bytes(tree)
         if spec.topology == "ring":
@@ -139,6 +172,12 @@ class StackedBackend:
             return 2.0 * total
         # dense einsum over a sharded node axis lowers to an all-gather:
         # every node row reaches every other node
+        return float(spec.n_nodes - 1) * total
+
+    def est_quant_hop_bytes(self, spec, tree: PyTree) -> float:
+        total = _quant_tree_bytes(tree)
+        if spec.topology == "ring":
+            return 2.0 * total
         return float(spec.n_nodes - 1) * total
 
     def __repr__(self):
@@ -164,7 +203,10 @@ class ShardMapBackend:
 
     name = "shard_map"
 
-    def __init__(self, mesh: Mesh, axis: str | Sequence[str] = "node"):
+    def __init__(self, mesh: Mesh, axis: str | Sequence[str] = "node",
+                 fuse: str = "auto", fuse_depth: Optional[int] = None):
+        if fuse not in ("auto", "on", "off"):
+            raise ValueError(f"fuse must be auto|on|off, got {fuse!r}")
         self.mesh = mesh
         self.axes: tuple[str, ...] = (axis,) if isinstance(axis, str) \
             else tuple(axis)
@@ -172,7 +214,22 @@ class ShardMapBackend:
             if a not in mesh.shape:
                 raise ValueError(f"mesh {mesh.shape} has no axis {a!r}")
         self.axis_size = int(np.prod([mesh.shape[a] for a in self.axes]))
+        self.fuse = fuse
+        # hops per megakernel launch (halo width == depth); None = all hops
+        # in one launch.  Bounds the halo so a deep W^k schedule on a small
+        # block doesn't drown the panel in halo rows.
+        self.fuse_depth = fuse_depth
+        # "auto" fuses everywhere launch latency dominates: always on TPU
+        # (the kernel's target — k launches collapse to 1), but on the
+        # CPU/GPU oracle paths only for small rows, where the 2*halo extra
+        # panel rows cost less than the k-1 saved collective rounds
+        self._fuse_on_big_rows = any(
+            d.platform == "tpu" for d in mesh.devices.flat)
         self._stacked = StackedBackend()
+
+    #: "auto" row-size cutoff on non-TPU backends (bytes per node row);
+    #: above this the hop-by-hop schedule's smaller working set wins there
+    AUTO_FUSE_MAX_ROW_BYTES = 1 << 20
 
     # -- helpers ------------------------------------------------------------
 
@@ -204,10 +261,78 @@ class ShardMapBackend:
         d = self.axis_size
         return [(i, (i + direction) % d) for i in range(d)]
 
+    def _perm_shift(self, j: int):
+        """Permutation under which every device receives from device i-j
+        (send i -> i+j around the ring); ``_perm(d)`` generalized."""
+        d = self.axis_size
+        return [(i, (i + j) % d) for i in range(d)]
+
+    def _gather_halo(self, x: Array, halo: int) -> Array:
+        """Assemble the ``(halo + b + halo, ...)`` megakernel input panel.
+
+        The halo of width ``halo`` on each side is fetched with
+        ``ceil(halo/b)`` *independent* shift-j ppermutes per direction —
+        they carry no data dependence on each other, so XLA can put all of
+        them on the wire concurrently (vs. the unfused schedule's k strictly
+        serialized edge exchanges).  Wire bytes are identical to k unfused
+        hops: 2*halo rows per device either way.
+        """
+        ax = self._axis_name
+        b = x.shape[0]
+        m = -(-halo // b)                          # ppermute shifts per side
+        top, bot = [], []
+        for j in range(1, m + 1):
+            cnt = min(b, halo - (j - 1) * b)       # rows still needed
+            top.append(jax.lax.ppermute(x[-cnt:], ax, self._perm_shift(j)))
+            bot.append(jax.lax.ppermute(x[:cnt], ax, self._perm_shift(-j)))
+        # top pieces arrive nearest-neighbour first; the panel wants the
+        # furthest rows first, so reverse.  Bottom pieces stack in order.
+        return jnp.concatenate(top[::-1] + [x] + bot, axis=0)
+
     # -- exact ring hops ----------------------------------------------------
 
     def _ring_hops_block(self, x: Array, steps: int, wc: float,
                          ws: float) -> Array:
+        """``steps`` ring hops on the local (b, ...) node block: one halo
+        exchange + one fused megakernel (the fast path), or the hop-by-hop
+        double-buffered schedule when ``fuse='off'`` — or when ``'auto'``
+        decides the fusion doesn't pay on this backend/row size."""
+        if self.fuse == "off" or steps <= 0:
+            return self._ring_hops_block_unfused(x, steps, wc, ws)
+        if self.fuse == "auto" and not self._fuse_on_big_rows:
+            row_bytes = (x.size // x.shape[0]) * x.dtype.itemsize
+            if row_bytes > self.AUTO_FUSE_MAX_ROW_BYTES:
+                return self._ring_hops_block_unfused(x, steps, wc, ws)
+        return self._ring_hops_block_fused(x, steps, wc, ws)
+
+    def _ring_hops_block_fused(self, x: Array, steps: int, wc: float,
+                               ws: float) -> Array:
+        """Halo-panel fusion: gather a halo of width k, then ONE Pallas
+        launch runs all k combines VMEM-resident.
+
+        Rows beyond the halo see zeros instead of their true ring
+        neighbours, so panel-end garbage advances exactly one row per hop —
+        the center ``b`` rows are exact as long as ``halo >= hops`` (same
+        invariant the kernel asserts).  Per-element math is the identical
+        ``wc*z + ws*(l+r)`` expression, hence still bit-equal to the
+        stacked path.  ``fuse_depth`` chunks a deep schedule into multiple
+        launches of at most that many hops each.
+        """
+        from repro.kernels import ops
+        shape = x.shape
+        remaining = steps
+        while remaining > 0:
+            k = min(self.fuse_depth or remaining, remaining)
+            panel = self._gather_halo(x, k)
+            x = ops.multi_hop_mix(
+                panel.reshape(panel.shape[0], -1), hops=k,
+                out_rows=shape[0], halo=k, w_self=wc, w_side=ws,
+            ).reshape(shape)
+            remaining -= k
+        return x
+
+    def _ring_hops_block_unfused(self, x: Array, steps: int, wc: float,
+                                 ws: float) -> Array:
         """``steps`` ring hops on the local (b, ...) node block.
 
         Per-row math is ``wc*x_i + ws*(x_{i-1} + x_{i+1})`` — expression-
@@ -375,6 +500,58 @@ class ShardMapBackend:
 
         return self._shmap(body, (self._pspec, self._pspec))(q, scale)
 
+    def quant_ring_hops(self, spec, x: Array, steps: int, *,
+                        out_dtype=None) -> Array:
+        """All-hop compressed ``W^k`` schedule.  Fused path: quantize the
+        local block once, halo-exchange the *int8* panel (+ per-row scales),
+        then one ``multi_hop_mix_quant`` launch replays every hop's
+        dequant -> combine -> requant chain VMEM-resident.  The in-kernel
+        requantization is the same deterministic formula the stacked oracle
+        applies globally, so both paths decode identical int8 values and
+        agree to FMA rounding of the combines."""
+        if self._use_stacked(spec):
+            return self._stacked.quant_ring_hops(spec, x, steps,
+                                                 out_dtype=out_dtype)
+        if steps <= 0:
+            return x if out_dtype is None else x.astype(out_dtype)
+        from repro.comms.compress import quantize_det
+        from repro.kernels import ops
+        out_dtype = x.dtype if out_dtype is None else out_dtype
+        b = self._block(spec)
+        wc = spec.self_weight
+        ws = (1.0 - wc) / 2.0
+
+        if self.fuse == "off":
+            # hop-by-hop: global deterministic quantize, shard compressed hop
+            z = x
+            n = x.shape[0]
+            for _ in range(steps):
+                q, s = quantize_det(z)
+                z = self.quant_ring_hop(
+                    spec, q.reshape(n, -1), s.reshape(n, 1),
+                    out_dtype=jnp.float32).reshape(x.shape)
+            return z.astype(out_dtype)
+
+        def body(xb):
+            shape = xb.shape
+            zb = xb
+            remaining = steps
+            while remaining > 0:
+                k = min(self.fuse_depth or remaining, remaining)
+                # quantize_det here IS the requant the kernel's next chunk
+                # would have applied — chunking preserves the all-hop math
+                qb, sb = quantize_det(zb.reshape(b, -1))
+                zb = ops.multi_hop_mix_quant(
+                    self._gather_halo(qb, k),
+                    self._gather_halo(sb, k),
+                    hops=k, out_rows=b, halo=k, w_self=wc, w_side=ws,
+                    out_dtype=jnp.float32,
+                ).reshape(shape)
+                remaining -= k
+            return zb.astype(out_dtype)
+
+        return self._shmap(body, (self._pspec,))(x)
+
     def est_hop_bytes(self, spec, tree: PyTree) -> float:
         if self._use_stacked(spec):
             return self._stacked.est_hop_bytes(spec, tree)
@@ -385,9 +562,19 @@ class ShardMapBackend:
             return 2.0 * self.axis_size * row
         return float(spec.n_nodes - 1) * total   # all-gather
 
+    def est_quant_hop_bytes(self, spec, tree: PyTree) -> float:
+        if self._use_stacked(spec):
+            return self._stacked.est_quant_hop_bytes(spec, tree)
+        total = _quant_tree_bytes(tree)
+        row = total / max(spec.n_nodes, 1)
+        if spec.topology == "ring":
+            # halo exchange ships the same 2 rows/hop, just int8 + scale
+            return 2.0 * self.axis_size * row
+        return float(spec.n_nodes - 1) * total
+
     def __repr__(self):
         return (f"ShardMapBackend(axes={self.axes}, "
-                f"axis_size={self.axis_size})")
+                f"axis_size={self.axis_size}, fuse={self.fuse!r})")
 
 
 # ---------------------------------------------------------------------------
@@ -407,6 +594,13 @@ def _tree_bytes(tree: PyTree) -> float:
     return float(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree)))
 
 
+def _quant_tree_bytes(tree: PyTree) -> float:
+    """Bytes of one int8-compressed copy: 1 B/element + one f32 scale per
+    node row (leaf axis 0)."""
+    return float(sum(l.size * 1 + l.shape[0] * 4
+                     for l in jax.tree.leaves(tree)))
+
+
 def resolve_backend(spec) -> MixBackend:
     """The backend a ``GossipSpec`` routes through (stacked when unset)."""
     be = getattr(spec, "backend", None)
@@ -414,26 +608,31 @@ def resolve_backend(spec) -> MixBackend:
 
 
 def make_backend(kind: str = "auto", *, mesh: Optional[Mesh] = None,
-                 axis: str | Sequence[str] = "node") -> MixBackend:
+                 axis: str | Sequence[str] = "node", fuse: str = "auto",
+                 fuse_depth: Optional[int] = None) -> MixBackend:
     """Config-knob constructor.
 
     ``stacked`` — always the stacked backend.
     ``shard_map`` — requires a mesh with the node axis.
     ``auto`` — shard_map when a mesh with a >1-device node axis is given,
     stacked otherwise.
+    ``fuse``/``fuse_depth`` configure the shard_map multi-hop megakernel
+    (``auto``/``on`` = fused halo panels, ``off`` = hop-by-hop ppermute).
     """
     if kind == "stacked":
         return _DEFAULT_STACKED
     if kind == "shard_map":
         if mesh is None:
             raise ValueError("mix_backend='shard_map' requires a mesh")
-        return ShardMapBackend(mesh, axis=axis)
+        return ShardMapBackend(mesh, axis=axis, fuse=fuse,
+                               fuse_depth=fuse_depth)
     if kind == "auto":
         if mesh is not None:
             axes = (axis,) if isinstance(axis, str) else tuple(axis)
             if all(a in mesh.shape for a in axes) and \
                     int(np.prod([mesh.shape[a] for a in axes])) > 1:
-                return ShardMapBackend(mesh, axis=axis)
+                return ShardMapBackend(mesh, axis=axis, fuse=fuse,
+                                       fuse_depth=fuse_depth)
         return _DEFAULT_STACKED
     raise ValueError(f"unknown mix backend {kind!r}")
 

@@ -63,6 +63,18 @@ def _per_node_scale(x: Array) -> Array:
     return jnp.maximum(amax / 127.0, _EPS).astype(jnp.float32)
 
 
+def quantize_det(x: Array) -> tuple[Array, Array]:
+    """Deterministic int8: round-to-nearest with the same per-node max-abs
+    scale as :class:`Int8Stochastic`.  The all-hop compressed ``W^k``
+    schedule requantizes with THIS formula at every hop, both in the stacked
+    oracle and inside the shard_map megakernel — determinism is what keeps
+    the two layouts' decoded int8 values identical at every hop (so their
+    results differ only by FMA rounding of the final combines)."""
+    scale = _per_node_scale(x)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
 @dataclasses.dataclass(frozen=True)
 class Int8Stochastic(Compressor):
     """Unbiased stochastic int8: q = floor(x/scale + U[0,1)), per-node scale."""

@@ -113,9 +113,10 @@ class CommEngine:
         ``raw`` is ``steps`` full-precision hops of the backend's
         ``est_hop_bytes`` oracle.  A compressed round ships the payload
         ``C(x - x_hat)`` to every neighbour once (2 on a ring, n-1 dense)
-        plus, for multi-hop rounds, ``steps - 1`` full-precision hat hops —
-        exactly how ``_gossip_hats`` executes.  wire/raw is the round's
-        realized compression ratio.
+        plus ``steps - 1`` hat hops — full-precision under
+        ``quant_hops="first"``, int8 (+ per-row scales) when the all-hop
+        schedule requantizes at every hop — exactly how ``_gossip_hats``
+        executes.  wire/raw is the round's realized compression ratio.
         """
         per_hop = self.backend.est_hop_bytes(self.gossip, tree)
         raw = float(steps) * per_hop
@@ -124,7 +125,10 @@ class CommEngine:
         payload = tree_bits(self.compressor, tree) / 8.0
         fanout = 2.0 if self.gossip.topology == "ring" \
             else float(max(self.gossip.n_nodes - 1, 1))
-        wire = fanout * payload + float(max(steps - 1, 0)) * per_hop
+        per_tail = per_hop
+        if self.comm.quant_hops == "all" and self._use_fused_hop():
+            per_tail = self.backend.est_quant_hop_bytes(self.gossip, tree)
+        wire = fanout * payload + float(max(steps - 1, 0)) * per_tail
         return wire, raw
 
     def _keys(self, state: CommState, slot: str, rnd: Array | int
@@ -237,8 +241,17 @@ class CommEngine:
                           for q, sc, l in zip(qs, scales, leaves_old)])
             first = (jax.tree.map(lambda b, w: b + w, base, wire_mix)
                      if base is not None else wire_mix)
-            return self.backend.mix(self.gossip, first, steps=s - 1) \
-                if s > 1 else first
+            if s <= 1:
+                return first
+            if self.comm.quant_hops == "all":
+                # tail hops stay on the int8 wire: every hop requantizes
+                # deterministically (the shard_map backend fuses the whole
+                # chain into one multi_hop_mix_quant launch per leaf)
+                return jax.tree.map(
+                    lambda l: self.backend.quant_ring_hops(
+                        self.gossip, l, s - 1, out_dtype=l.dtype),
+                    first)
+            return self.backend.mix(self.gossip, first, steps=s - 1)
         return self.backend.mix_channel(self.gossip, self.channel, hat_new,
                                         rnd, k_chan, steps=s)
 

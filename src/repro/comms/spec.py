@@ -43,6 +43,12 @@ class CommSpec:
     gamma_ema: float = 0.9         # EMA smoothing of the observed delta
     gamma_min: float = 0.05        # floor on the adaptive step
     fuse_kernel: bool = True       # int8 ring hop through the quant_mix kernel
+    # which hops of a multi-hop (k > 1) fused int8 round are compressed:
+    # "first" ships C(x - x_hat) once then mixes the hats in fp32 (the
+    # original CHOCO wire), "all" deterministically requantizes at EVERY hop
+    # so int8 bytes are all that ever travel (multi_hop_mix_quant megakernel
+    # under the shard_map backend)
+    quant_hops: Literal["first", "all"] = "first"
     # --- channel -----------------------------------------------------------
     drop_rate: float = 0.0         # per-edge i.i.d. Bernoulli drop probability
     straggler_rate: float = 0.0    # per-node i.i.d. skip probability

@@ -168,6 +168,10 @@ class ModelConfig:
     comm_rank: int = 4                 # retained rank per matrix leaf (lowrank)
     comm_gamma: float = 0.9            # CHOCO consensus step on the hats
     comm_error_feedback: bool = True   # False => naive quantized gossip
+    # Which hops of a k>1 int8 round are compressed: "first" ships the
+    # payload once then mixes hats in fp32; "all" requantizes at every hop
+    # so only int8 bytes ever travel.
+    comm_quant_hops: str = "first"
     # Channel faults / time-varying topology for each gossip hop.
     comm_drop_rate: float = 0.0
     comm_straggler_rate: float = 0.0
@@ -191,6 +195,7 @@ class ModelConfig:
                         topk_frac=self.comm_topk_frac, rank=self.comm_rank,
                         gamma=self.comm_gamma,
                         error_feedback=self.comm_error_feedback,
+                        quant_hops=self.comm_quant_hops,
                         drop_rate=self.comm_drop_rate,
                         straggler_rate=self.comm_straggler_rate,
                         schedule=self.comm_schedule)

@@ -1,0 +1,220 @@
+"""Fused multi-hop ring-gossip megakernel.
+
+One ``pallas_call`` executes the *entire* local work of a k-hop ``W^k``
+ring schedule.  The hop-by-hop ``ShardMapBackend`` path pays k ppermute
+launches plus k combine launches per mix; the bench shows that launch
+latency — not bytes — is what loses to the stacked backend (127 vs 998
+hops/sec at 64k params/node).  This kernel collapses the schedule:
+
+halo formulation
+  The caller (``ShardMapBackend._gather_halo``) prepends/appends ``halo``
+  neighbour rows to the local ``b``-row node block, giving a
+  ``(halo + b + halo, F)`` panel in which row ``i``'s ring neighbours are
+  simply rows ``i-1`` / ``i+1``.  All ``hops <= halo`` combines then run
+  **locally** with zero wire events as a shrinking "pyramid": each hop
+  combines only the interior rows,
+
+      z <- wc * z[1:-1] + ws * (z[:-2] + z[2:])
+
+  dropping the two boundary rows (which have no valid neighbour on one
+  side).  After ``hops`` hops the window is exactly the rows a valid
+  ``hops``-deep dependency cone can produce, and the center rows are
+  bit-exact — per-element the expression is the same f32
+  ``wc*x + ws*(l + r)`` as ``ring_mix`` / the stacked ``mix_ring`` leaf,
+  which is what keeps the cross-backend bit-identity contract of
+  ``test_mix_backend_equiv.py`` intact.  (The pyramid also does only the
+  row work that can reach the center — no combines on panel-end garbage.)
+
+fp32 variant (``multi_hop_mix_flat``)
+  Single-pass grid over feature blocks: the panel's rows all fit one block
+  (``b + 2*halo`` is small), so each grid step loads a ``(rows, block_f)``
+  tile, runs every hop in VMEM, and writes only the ``out_rows`` center
+  rows — one panel read + one block write total, versus 2k HBM round
+  trips for the unfused schedule.
+
+int8 variant (``multi_hop_mix_quant_flat``)
+  The all-hop compressed schedule: the panel arrives as int8 payloads with
+  one f32 scale per row (only those bytes crossed the wire), hop 0 fuses
+  dequantize + combine, and every later hop *re-quantizes* its input
+  deterministically (round-to-nearest, per-row max-abs/127 scale — the
+  values a receiver would have decoded had that hop's rows been shipped as
+  int8).  Per-row maxima need the full row, so this variant uses the
+  two-pass revisiting-grid trick from ``retract.py``: the f32 state lives
+  in the output ref (revisited per stage), a max-accumulate stage reduces
+  row maxima into VMEM scratch across feature blocks, and the following
+  stage requantizes + combines.  Quantization math is kept expression-
+  identical to ``comms.compress.quantize_det`` so the stacked backend's
+  hop-by-hop oracle decodes the same int8 values at every hop (results
+  agree to FMA rounding of the final combines).
+
+``kernels/ref.py`` holds the jnp oracles; ``ops.multi_hop_mix`` /
+``ops.multi_hop_mix_quant`` own dispatch, padding and blocking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_F = 1024
+_EPS = 1e-12   # same scale floor as comms.compress
+
+
+def _hop(z: Array, wc: float, ws: float) -> Array:
+    """One ring combine on the interior rows of a panel value (row i sees
+    rows i-1 / i+1; the two boundary rows drop out) — the shrinking
+    "pyramid": only rows that can still influence the center are combined,
+    and no zero-padding concats are materialized.  Mirrors ``_panel_hop``
+    in ``kernels/ref.py`` so interpret mode stays bitwise with the oracle."""
+    return wc * z[1:-1] + ws * (z[:-2] + z[2:])
+
+
+def _shift_down(z: Array) -> Array:
+    """Row i-1's value at row i; zeros shifted in at the top."""
+    return jnp.concatenate([jnp.zeros_like(z[:1]), z[:-1]], axis=0)
+
+
+def _shift_up(z: Array) -> Array:
+    """Row i+1's value at row i; zeros shifted in at the bottom."""
+    return jnp.concatenate([z[1:], jnp.zeros_like(z[:1])], axis=0)
+
+
+def _hop_dq(q: Array, s: Array, wc: float, ws: float) -> Array:
+    """One ring combine on quantized panel values with per-row scales,
+    dequantizing each shifted operand separately —
+    ``wc*dq(q_i) + ws*(dq(q_{i-1}) + dq(q_{i+1}))``, the same dataflow as
+    ``quant_mix_ref`` / ``multi_hop_mix_quant_ref`` (so kernel and oracle
+    agree bitwise under jit; cross-backend results agree to FMA rounding)."""
+    dq = q * s
+    dq_l = _shift_down(q) * _shift_down(s)
+    dq_r = _shift_up(q) * _shift_up(s)
+    return wc * dq + ws * (dq_l + dq_r)
+
+
+# ---------------------------------------------------------------------------
+# fp32 megakernel — single pass
+# ---------------------------------------------------------------------------
+
+
+def _mhm_kernel(x_ref, o_ref, *, hops: int, halo: int, w_self: float,
+                w_side: float):
+    z = x_ref[...].astype(jnp.float32)
+    for _ in range(hops):
+        z = _hop(z, w_self, w_side)
+    out_rows = o_ref.shape[0]
+    lo = halo - hops                 # each hop dropped one row per side
+    o_ref[...] = z[lo:lo + out_rows].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("hops", "out_rows", "halo",
+                                             "w_self", "w_side", "block_f",
+                                             "interpret"))
+def multi_hop_mix_flat(panel: Array, *, hops: int, out_rows: int, halo: int,
+                       w_self: float, w_side: float,
+                       block_f: int = DEFAULT_BLOCK_F,
+                       interpret: bool = False) -> Array:
+    """``hops`` fused ring combines on a ``(halo + b + halo [+ pad], F)``
+    panel; returns the ``(out_rows, F)`` center rows.  ``F % block_f == 0``
+    (ops.py pads); requires ``halo >= hops`` for exact output."""
+    rows, f = panel.shape
+    block_f = min(block_f, f)
+    if f % block_f:
+        raise ValueError(f"multi_hop_mix_flat: F={f} not a multiple of "
+                         f"block_f={block_f}; pad the lane tail "
+                         f"(ops.multi_hop_mix does)")
+    kernel = functools.partial(_mhm_kernel, hops=hops, halo=halo,
+                               w_self=w_self, w_side=w_side)
+    return pl.pallas_call(
+        kernel,
+        grid=(f // block_f,),
+        in_specs=[pl.BlockSpec((rows, block_f), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((out_rows, block_f), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, f), panel.dtype),
+        interpret=interpret,
+        name="multi_hop_mix",
+    )(panel)
+
+
+# ---------------------------------------------------------------------------
+# int8 all-hop megakernel — revisiting grid, per-hop requantization
+# ---------------------------------------------------------------------------
+
+
+def _mhmq_kernel(q_ref, s_ref, state_ref, mx_ref, sc_ref, *, hops: int,
+                 w_self: float, w_side: float):
+    """Stages over ``program_id(0)``: stage 0 dequantizes the wire payload
+    and runs hop 0; each later hop is a (max-accumulate, requantize +
+    combine) stage pair.  The f32 evolving panel lives in ``state_ref``
+    (the output, revisited every stage); the caller slices the center rows.
+    """
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    del hops  # schedule length is encoded in the grid
+
+    @pl.when(p == 0)
+    def _hop0():
+        state_ref[...] = _hop_dq(q_ref[...].astype(jnp.float32),
+                                 s_ref[...].astype(jnp.float32),
+                                 w_self, w_side)
+
+    @pl.when(p % 2 == 1)
+    def _row_max():
+        @pl.when(j == 0)
+        def _reset():
+            mx_ref[...] = jnp.zeros_like(mx_ref)
+
+        m = jnp.max(jnp.abs(state_ref[...]), axis=1, keepdims=True)
+        mx_ref[...] = jnp.maximum(mx_ref[...],
+                                  jnp.broadcast_to(m, mx_ref.shape))
+
+        @pl.when(j == nj - 1)
+        def _finalize_scale():
+            sc_ref[...] = jnp.maximum(mx_ref[...] / 127.0, _EPS)
+
+    @pl.when((p >= 2) & (p % 2 == 0))
+    def _requant_combine():
+        scale = sc_ref[...][:, :1]                       # (rows, 1)
+        # rounded values are integers, exact in f32 — no int8 cast needed
+        q = jnp.clip(jnp.round(state_ref[...] / scale), -127.0, 127.0)
+        state_ref[...] = _hop_dq(q, scale, w_self, w_side)
+
+
+@functools.partial(jax.jit, static_argnames=("hops", "w_self", "w_side",
+                                             "block_f", "interpret"))
+def multi_hop_mix_quant_flat(q_panel: Array, s_panel: Array, *, hops: int,
+                             w_self: float, w_side: float,
+                             block_f: int = DEFAULT_BLOCK_F,
+                             interpret: bool = False) -> Array:
+    """All-hop compressed schedule on an int8 ``(rows, F)`` halo panel with
+    per-row f32 scales ``(rows, 1)``.  Returns the full f32 ``(rows, F)``
+    evolved panel (callers slice the center rows) — the panel is the
+    kernel's cross-stage state, so it is the natural output shape."""
+    rows, f = q_panel.shape
+    block_f = min(block_f, f)
+    if f % block_f:
+        raise ValueError(f"multi_hop_mix_quant_flat: F={f} not a multiple "
+                         f"of block_f={block_f}; pad the lane tail "
+                         f"(ops.multi_hop_mix_quant does)")
+    kernel = functools.partial(_mhmq_kernel, hops=hops, w_self=w_self,
+                               w_side=w_side)
+    q_spec = pl.BlockSpec((rows, block_f), lambda p, j: (0, j))
+    s_spec = pl.BlockSpec((rows, 1), lambda p, j: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(2 * hops - 1, f // block_f),
+        in_specs=[q_spec, s_spec],
+        out_specs=pl.BlockSpec((rows, block_f), lambda p, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, f), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),   # per-row |z| max acc
+            pltpu.VMEM((rows, 128), jnp.float32),   # finalized scales
+        ],
+        interpret=interpret,
+        name="multi_hop_mix_quant",
+    )(q_panel, s_panel)

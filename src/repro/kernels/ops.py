@@ -1,6 +1,7 @@
 """jit'd public wrappers for the Pallas kernels, with backend dispatch.
 
-Dispatch policy (per-call overridable with ``impl=``):
+Dispatch policy (per-call overridable with ``impl=``, process-wide with
+``REPRO_KERNEL_IMPL=ref|pallas|pallas_interpret``):
 
   * ``tpu`` backend            -> Pallas kernel (compiled)
   * anything else (CPU here)   -> pure-jnp oracle from ``ref.py`` — identical
@@ -8,26 +9,37 @@ Dispatch policy (per-call overridable with ``impl=``):
     representative.
   * ``impl="pallas_interpret"``-> Pallas kernel body interpreted in Python
     (the CPU validation path used by the kernel tests).
+
+Launch configs (block shapes, NS iteration counts) resolve through
+``kernels/tune.py``: a tuned config cached for this exact
+(kernel, shape, dtype) key wins, the hand-picked defaults otherwise
+(``REPRO_TUNE=off`` skips the cache entirely).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import multi_hop_mix as _mh
 from repro.kernels import quant_mix as _qm
 from repro.kernels import ref
 from repro.kernels import retract as _rt
 from repro.kernels import ring_mix as _rm
 from repro.kernels import stiefel_project as _sp
+from repro.kernels import tune as _tune
 from repro.obs import estimates as _est
 
 Array = jax.Array
 
 
 def _default_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
@@ -144,15 +156,25 @@ def stiefel_project(x: Array, g: Array, *, impl: str | None = None,
 # ---------------------------------------------------------------------------
 
 
-def fused_retract(x: Array, g: Array, *, ns_iters: int = _rt.DEFAULT_NS_ITERS,
+def fused_retract(x: Array, g: Array, *, ns_iters: int | None = None,
                   impl: str | None = None,
-                  block_d: int = _rt.DEFAULT_BLOCK_D) -> Array:
+                  block_d: int | None = None) -> Array:
     """R_x(P_{T_x}(g)) over the last two dims; leading dims (the node-stacked
     axis) are vmapped.  ``g`` is the AMBIENT update direction — tangent
     projection happens inside the kernel (GDAHyper.retraction="polar_fused").
+
+    ``ns_iters`` / ``block_d`` default to the tuned config for this
+    (d, r, dtype) when one is cached (see ``kernels/tune.py``), else the
+    hand-picked defaults; explicit values always win.
     """
     impl = impl or _default_impl()
     d, r = x.shape[-2:]
+    if ns_iters is None or block_d is None:
+        cfg = _tune.lookup("fused_retract", (d, r), str(x.dtype)) or {}
+        if ns_iters is None:
+            ns_iters = cfg.get("ns_iters", _rt.DEFAULT_NS_ITERS)
+        if block_d is None:
+            block_d = cfg.get("block_d", _rt.DEFAULT_BLOCK_D)
     _est.record("fused_retract", _est.fused_retract_est(
         d, r, ns_iters=ns_iters, lead=max(1, x.size // (d * r)),
         itemsize=_itemsize(x)))
@@ -214,8 +236,11 @@ def ring_mix(x_self: Array, x_left: Array, x_right: Array, *,
     # tiles the padded panel exactly
     pad_rows = (-rows) % 8
     rows_p = rows + pad_rows
+    tuned = _tune.lookup("ring_mix", (rows_p, lane), str(x_self.dtype)) or {}
+    cands = ([tuned["block_rows"]] if "block_rows" in tuned else []) \
+        + [_rm.DEFAULT_BLOCK_ROWS, 128, 64, 32, 16, 8]
     block = rows_p
-    for cand in (_rm.DEFAULT_BLOCK_ROWS, 128, 64, 32, 16, 8):
+    for cand in cands:
         if rows_p % cand == 0:
             block = cand
             break
@@ -276,8 +301,11 @@ def quant_mix(q_self: Array, q_left: Array, q_right: Array,
         return jnp.pad(qf, ((0, pad_r), (0, pad_c)))
 
     scales = [jnp.pad(s, ((0, pad_r), (0, 0))) for s in scales]
+    tuned = _tune.lookup("quant_mix", (rows_p, cols_p), "int8") or {}
+    cands = ([tuned["block_cols"]] if "block_cols" in tuned else []) \
+        + [_qm.DEFAULT_BLOCK_COLS, 1024, 512, 256, 128]
     block_c = cols_p
-    for cand in (_qm.DEFAULT_BLOCK_COLS, 1024, 512, 256, 128):
+    for cand in cands:
         if cols_p % cand == 0:
             block_c = cand
             break
@@ -286,3 +314,98 @@ def quant_mix(q_self: Array, q_left: Array, q_right: Array,
                            block_rows=32, block_cols=block_c,
                            interpret=(impl == "pallas_interpret"))
     return out[:rows, :cols].reshape(q_self.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-hop ring mix (halo-panel megakernel)
+# ---------------------------------------------------------------------------
+
+
+def _pick_block_f(kernel: str, rows_p: int, f_p: int, dtype,
+                  hops: int, block_f: int | None) -> int:
+    """Feature-block width: explicit > tuned-for-this-key > the largest
+    default candidate dividing the padded lane count (which is a multiple
+    of 128, so the 128 fallback always divides)."""
+    if block_f is not None:
+        return block_f
+    tuned = _tune.lookup(kernel, (rows_p, f_p), str(dtype),
+                         extra={"hops": hops}) or {}
+    cands = ([tuned["block_f"]] if "block_f" in tuned else []) \
+        + [_mh.DEFAULT_BLOCK_F, 4096, 2048, 512, 256, 128]
+    for cand in cands:
+        if f_p % cand == 0:
+            return cand
+    return f_p
+
+
+def multi_hop_mix(panel: Array, *, hops: int, out_rows: int, halo: int,
+                  w_self: float, w_side: float, impl: str | None = None,
+                  block_f: int | None = None) -> Array:
+    """``hops`` fused ring combines on a halo panel ``(halo + b + halo, ...)``
+    (trailing dims flattened); returns the exact ``(out_rows, ...)`` center
+    rows.  Requires ``halo >= hops``; both the lane tail and (for the
+    compiled kernel) the row tail are zero-padded — bottom-row padding is
+    exact because panel-end garbage advances one row per hop and never
+    reaches the center rows.
+    """
+    assert halo >= hops, (halo, hops)
+    impl = impl or _default_impl()
+    rows = panel.shape[0]
+    f = panel.size // rows
+    _est.record("multi_hop_mix", _est.multi_hop_mix_est(
+        rows, f, hops=hops, out_rows=out_rows, itemsize=_itemsize(panel)))
+    if impl == "ref":
+        out = ref.multi_hop_mix_ref(panel.reshape(rows, -1), hops=hops,
+                                    out_rows=out_rows, halo=halo,
+                                    w_self=w_self, w_side=w_side)
+        return out.reshape((out_rows,) + panel.shape[1:])
+
+    pad_f = (-f) % 128
+    pad_r = (-rows) % 8
+    p2 = jnp.pad(panel.reshape(rows, -1), ((0, pad_r), (0, pad_f)))
+    f_p = f + pad_f
+    block = _pick_block_f("multi_hop_mix", rows + pad_r, f_p, panel.dtype,
+                          hops, block_f)
+    out = _mh.multi_hop_mix_flat(p2, hops=hops, out_rows=out_rows, halo=halo,
+                                 w_self=w_self, w_side=w_side, block_f=block,
+                                 interpret=(impl == "pallas_interpret"))
+    return out[:, :f].reshape((out_rows,) + panel.shape[1:])
+
+
+def multi_hop_mix_quant(q_panel: Array, s_panel: Array, *, hops: int,
+                        out_rows: int, halo: int, w_self: float,
+                        w_side: float, out_dtype=jnp.float32,
+                        impl: str | None = None,
+                        block_f: int | None = None) -> Array:
+    """All-hop compressed ``hops``-hop schedule on an int8 halo panel with
+    per-row f32 scales: hop 0 fuses dequantize + combine, later hops
+    requantize deterministically before combining (the values a receiver
+    decodes from an int8 wire).  Returns the ``(out_rows, ...)`` center
+    rows in ``out_dtype``."""
+    assert halo >= hops, (halo, hops)
+    impl = impl or _default_impl()
+    rows = q_panel.shape[0]
+    f = q_panel.size // rows
+    _est.record("multi_hop_mix_quant", _est.multi_hop_mix_est(
+        rows, f, hops=hops, out_rows=out_rows, quant=True))
+    s2 = s_panel.reshape(rows, 1)
+    if impl == "ref":
+        z = ref.multi_hop_mix_quant_ref(q_panel.reshape(rows, -1), s2,
+                                        hops=hops, w_self=w_self,
+                                        w_side=w_side)
+        return z[halo:halo + out_rows].astype(out_dtype) \
+            .reshape((out_rows,) + q_panel.shape[1:])
+
+    # int8 min tile is (32, 128); padded q rows are zero -> dequantize to 0
+    pad_f = (-f) % 128
+    pad_r = (-rows) % 32
+    q2 = jnp.pad(q_panel.reshape(rows, -1), ((0, pad_r), (0, pad_f)))
+    s2 = jnp.pad(s2, ((0, pad_r), (0, 0)), constant_values=1.0)
+    f_p = f + pad_f
+    block = _pick_block_f("multi_hop_mix_quant", rows + pad_r, f_p, "int8",
+                          hops, block_f)
+    z = _mh.multi_hop_mix_quant_flat(q2, s2, hops=hops, w_self=w_self,
+                                     w_side=w_side, block_f=block,
+                                     interpret=(impl == "pallas_interpret"))
+    return z[halo:halo + out_rows, :f].astype(out_dtype) \
+        .reshape((out_rows,) + q_panel.shape[1:])

@@ -167,6 +167,70 @@ def ring_mix_ref(x_self: Array, x_left: Array, x_right: Array,
 
 
 # ---------------------------------------------------------------------------
+# fused multi-hop ring mix (halo-panel megakernel)
+# ---------------------------------------------------------------------------
+
+
+def _panel_hop(z: Array, w_self: float, w_side: float) -> Array:
+    """One ring combine on the *interior* rows of a halo panel: row ``i``'s
+    neighbours are rows ``i-1`` / ``i+1``, and the result drops the two
+    boundary rows (they have no valid neighbour on one side).  Per-element
+    this is the same ``wc*x + ws*(l + r)`` expression as ``ring_mix_ref``;
+    the shrinking "pyramid" does only the row work that can still reach the
+    center — exactly ``halo >= hops`` wide — instead of combining garbage
+    panel ends that get sliced away anyway."""
+    return w_self * z[1:-1] + w_side * (z[:-2] + z[2:])
+
+
+def _panel_hop_dq(q: Array, s: Array, w_self: float, w_side: float) -> Array:
+    """One ring combine on quantized panel values with per-row scales,
+    dequantizing each shifted operand separately — the same dataflow as
+    ``quant_mix_ref`` and the ``multi_hop_mix_quant_flat`` kernel, so the
+    oracle and the megakernel agree bitwise under jit (cross-backend
+    results agree to FMA rounding of the combines)."""
+    def shift_down(z):
+        return jnp.concatenate([jnp.zeros_like(z[:1]), z[:-1]], axis=0)
+
+    def shift_up(z):
+        return jnp.concatenate([z[1:], jnp.zeros_like(z[:1])], axis=0)
+
+    return (w_self * (q * s)
+            + w_side * (shift_down(q) * shift_down(s)
+                        + shift_up(q) * shift_up(s)))
+
+
+def multi_hop_mix_ref(panel: Array, *, hops: int, out_rows: int, halo: int,
+                      w_self: float, w_side: float) -> Array:
+    """``hops`` fused ring combines over a ``(halo + b + halo, F)`` panel;
+    returns the exact center ``(out_rows, F)`` rows (``halo >= hops``).
+    Each hop shrinks the live window by one row per side, so the center
+    starts at ``halo - hops`` in the final window."""
+    z = panel.astype(jnp.float32)
+    for _ in range(hops):
+        z = _panel_hop(z, w_self, w_side)
+    lo = halo - hops
+    return z[lo:lo + out_rows].astype(panel.dtype)
+
+
+def multi_hop_mix_quant_ref(q_panel: Array, s_panel: Array, *, hops: int,
+                            w_self: float, w_side: float) -> Array:
+    """All-hop compressed schedule on an int8 halo panel: hop 0 fuses
+    dequantize + combine, every later hop requantizes deterministically
+    (round-to-nearest, per-row max-abs/127 scale, 1e-12 floor — mirrors
+    ``comms.compress.quantize_det``) before combining.  Returns the full
+    evolved f32 panel (callers slice the center rows), matching
+    ``multi_hop_mix_quant_flat``."""
+    z = _panel_hop_dq(q_panel.astype(jnp.float32),
+                      s_panel.astype(jnp.float32), w_self, w_side)
+    for _ in range(1, hops):
+        amax = jnp.max(jnp.abs(z), axis=1, keepdims=True)
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(z / scale), -127.0, 127.0)
+        z = _panel_hop_dq(q, scale, w_self, w_side)
+    return z
+
+
+# ---------------------------------------------------------------------------
 # fused dequantize + ring combine
 # ---------------------------------------------------------------------------
 

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import threading
 
 
@@ -115,6 +116,32 @@ def quant_mix_est(rows: int, cols: int, *, out_itemsize: int = 4) -> Estimates:
     return Estimates(ops=ops, lds=lds, mem=mem)
 
 
+def multi_hop_mix_est(rows: int, f: int, *, hops: int, out_rows: int,
+                      itemsize: int = 4, quant: bool = False) -> Estimates:
+    """Fused k-hop halo-panel megakernel.
+
+    fp32: one panel read, ``hops`` combines at 4 flop/element in VMEM, one
+    ``(out_rows, f)`` write — the unfused schedule's 2k HBM round trips
+    collapse to ~1.  int8 all-hop: the payload arrives as 1 byte/element
+    (+4 B/row scales), hop 0 adds 1 dequant mul/element, later hops add a
+    ~4 flop/element requant (div, round, clip, mul) and revisit the f32
+    state panel once per stage (max pass + combine pass)."""
+    n = float(rows) * f
+    ops = 4.0 * hops * n
+    if quant:
+        ops += n + 4.0 * max(hops - 1, 0) * n       # dequant + requants
+        in_bytes = 1.0 * n + 4.0 * rows
+        # state panel written at every combine stage, re-read at every
+        # max + requant stage (the revisiting-grid traffic)
+        lds = in_bytes + 4.0 * n * (3.0 * max(hops - 1, 0) + 1.0)
+        mem = in_bytes + 4.0 * n
+    else:
+        in_bytes = float(itemsize) * n
+        lds = in_bytes + float(itemsize) * out_rows * f
+        mem = lds
+    return Estimates(ops=ops, lds=lds, mem=mem)
+
+
 #: the registered estimators, keyed by the ops.py dispatch name
 KERNELS = {
     "flash_attention": flash_attention_est,
@@ -122,6 +149,8 @@ KERNELS = {
     "fused_retract": fused_retract_est,
     "ring_mix": ring_mix_est,
     "quant_mix": quant_mix_est,
+    "multi_hop_mix": multi_hop_mix_est,
+    "multi_hop_mix_quant": functools.partial(multi_hop_mix_est, quant=True),
 }
 
 

@@ -170,6 +170,46 @@ def test_wire_counters_compressed_engine(tmp_path):
     assert obs.wire_bytes < obs.raw_bytes
 
 
+def test_wire_counters_quant_all_hops(tmp_path):
+    """quant_hops="all": the k-1 tail hops ship int8 payloads (+ one f32
+    scale per row), so the counters must follow est_quant_hop_bytes for the
+    tail — strictly below the quant_hops="first" wire, still matching the
+    engine's own accounting within 1%."""
+    prob = _make_problem()
+    comm = CommSpec(compressor="int8", gamma=0.9, quant_hops="all")
+    spec = GossipSpec(topology="ring", n_nodes=N_NODES, comm=comm)
+    tel = Telemetry(run="allhop", out_dir=str(tmp_path), flush_every=100)
+    opt = DRGDA(prob, spec, GDAHyper(), telemetry=tel)
+    steps = 3
+    state = _run(opt, steps=steps)
+    obs = unpack(state.obs)
+    x0, y0 = _init()
+    k = opt.k
+    assert k > 1, "multi-hop gossip required to exercise the tail hops"
+    eng_first = DRGDA(prob, GossipSpec(topology="ring", n_nodes=N_NODES,
+                                       comm=CommSpec(compressor="int8",
+                                                     gamma=0.9)),
+                      GDAHyper()).engine
+    expect_wire = expect_first = 0.0
+    for tree, hops in ((x0, k), (y0, k), (x0, k), (y0, 1)):   # x, y, u, v
+        w, _ = opt.engine.wire_round_bytes(tree, hops)
+        wf, _ = eng_first.wire_round_bytes(tree, hops)
+        expect_wire += float(w)
+        expect_first += float(wf)
+        # the tail accounting really is the int8 oracle
+        if hops > 1:
+            per_tail = opt.engine.backend.est_quant_hop_bytes(
+                opt.engine.gossip, tree)
+            per_fp32 = opt.engine.backend.est_hop_bytes(
+                opt.engine.gossip, tree)
+            assert per_tail < per_fp32
+            assert abs((w - wf) - (hops - 1) * (per_tail - per_fp32)) < 1e-6
+    assert expect_wire < expect_first
+    assert abs(obs.wire_bytes - steps * expect_wire) / (steps * expect_wire) \
+        < 0.01
+    assert obs.wire_bytes < obs.raw_bytes
+
+
 # ---------------------------------------------------------------------------
 # event log + schema
 # ---------------------------------------------------------------------------
@@ -265,7 +305,8 @@ def test_estimates_algebra():
     assert e.scaled(3).mem == 30.0
     assert e.intensity == 10.0
     assert set(obs_est.KERNELS) == {"flash_attention", "stiefel_project",
-                                    "fused_retract", "ring_mix", "quant_mix"}
+                                    "fused_retract", "ring_mix", "quant_mix",
+                                    "multi_hop_mix", "multi_hop_mix_quant"}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,185 @@
+"""Autotune cache: modes, round-trip, hysteresis, accuracy gate.
+
+Everything runs against a throwaway cache dir (``REPRO_TUNE_DIR``) so the
+repo's ``experiments/tune/`` is never touched; searches use tiny shapes so
+the timed sweep stays in the low seconds on CPU.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, tune
+
+TINY = {
+    "ring_mix": (16, 256),
+    "multi_hop_mix": (8, 256),
+    # d=128 so the SPACES block_d=128 candidates stay feasible and the
+    # ns_iters axis is actually searched (and accuracy-gated)
+    "fused_retract": (128, 8),
+}
+
+
+@pytest.fixture()
+def tune_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+    tune._MEM.clear()
+    yield str(tmp_path)
+    tune._MEM.clear()
+
+
+def test_mode_knob(monkeypatch):
+    monkeypatch.delenv("REPRO_TUNE", raising=False)
+    assert tune.mode() == "load"
+    monkeypatch.setenv("REPRO_TUNE", "search")
+    assert tune.mode() == "search"
+    monkeypatch.setenv("REPRO_TUNE", "banana")
+    with pytest.raises(ValueError):
+        tune.mode()
+
+
+def test_key_is_stable_and_extra_sorted():
+    k = tune.key("ring_mix", (64, 1024), "float32")
+    assert k == "ring_mix|64x1024|float32"
+    ka = tune.key("multi_hop_mix", (16, 128), "float32",
+                  {"hops": 3})
+    assert ka.endswith("|hops=3")
+
+
+def test_default_for_shape_steps_down_ladder():
+    # nominal block_rows=256 infeasible for 16 rows -> 16 divides at 16? the
+    # ladder tries 128, 64, 32, 16
+    assert tune._default_for_shape("ring_mix", (16, 256)) \
+        == {"block_rows": 16}
+    assert tune._default_for_shape("ring_mix", (512, 256)) \
+        == {"block_rows": 256}
+    # prime rows: nothing on the ladder divides -> the shape itself
+    assert tune._default_for_shape("ring_mix", (7, 256)) \
+        == {"block_rows": 7}
+    assert tune._default_for_shape("multi_hop_mix", (8, 130)) \
+        == {"block_f": 130}
+    assert tune._default_for_shape("fused_retract", (64, 8)) \
+        == {"block_d": 64, "ns_iters": 20}
+    assert tune._default_for_shape("fused_retract", (512, 8)) \
+        == {"block_d": 256, "ns_iters": 20}
+
+
+def test_off_mode_never_reads(tune_dir, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE", "off")
+    assert tune.lookup("ring_mix", TINY["ring_mix"], "float32") is None
+
+
+def test_load_mode_never_searches(tune_dir, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE", "load")
+    assert tune.lookup("ring_mix", TINY["ring_mix"], "float32") is None
+    assert not os.path.exists(tune.cache_path())
+
+
+def test_search_round_trip_second_run_pure_load(tune_dir, monkeypatch):
+    """The CI tune job's core assertion: a search populates the cache; the
+    same lookup again serves it without another search (``searches`` flat).
+    """
+    monkeypatch.setenv("REPRO_TUNE", "search")
+    cfg = tune.lookup("fused_retract", TINY["fused_retract"], "float32")
+    assert cfg is not None and "ns_iters" in cfg
+    assert os.path.exists(tune.cache_path())
+    with open(tune.cache_path()) as f:
+        cache = json.load(f)
+    assert cache["searches"] == 1
+    k = tune.key("fused_retract", TINY["fused_retract"], "float32")
+    entry = cache["entries"][k]
+    assert entry["default_config"] == \
+        tune._default_for_shape("fused_retract", TINY["fused_retract"])
+    assert entry["roofline"]  # placed on the roofline for the report
+
+    again = tune.lookup("fused_retract", TINY["fused_retract"], "float32")
+    assert again == cfg
+    with open(tune.cache_path()) as f:
+        assert json.load(f)["searches"] == 1   # pure load, no re-search
+
+    # and load mode serves the same entry
+    monkeypatch.setenv("REPRO_TUNE", "load")
+    assert tune.lookup("fused_retract", TINY["fused_retract"],
+                       "float32") == cfg
+
+
+def test_accuracy_gate_and_candidates_recorded(tune_dir, monkeypatch):
+    """ns_iters candidates that drift past ACCURACY_RTOL vs the default are
+    recorded but excluded from the winner."""
+    monkeypatch.setenv("REPRO_TUNE", "search")
+    entry = tune.autotune("fused_retract", TINY["fused_retract"], "float32")
+    gated = [c for c in entry["candidates"] if "accurate" in c]
+    assert gated, "non-default ns_iters candidates must be accuracy-checked"
+    for c in gated:
+        assert "max_abs_err" in c
+    winner = entry["config"]
+    rec = next(c for c in entry["candidates"] if c["config"] == winner)
+    assert rec.get("accurate", True)
+
+
+def test_hysteresis_keeps_default_on_noise(tune_dir, monkeypatch):
+    """Block-shape-only kernels are no-ops on the oracle path, so the ref
+    dedupe collapses them onto the default — the entry must come back with
+    the default config and ~0 speedup rather than chasing timer noise."""
+    monkeypatch.setenv("REPRO_TUNE", "search")
+    if tune._dispatch_impl() != "ref":
+        pytest.skip("oracle-path dedupe only applies off-TPU")
+    entry = tune.autotune("ring_mix", TINY["ring_mix"], "float32")
+    assert entry["config"] == \
+        tune._default_for_shape("ring_mix", TINY["ring_mix"])
+    assert len(entry["candidates"]) == 1
+
+
+def test_ops_consume_tuned_config(tune_dir, monkeypatch):
+    """End to end: a searched fused_retract entry with a non-default
+    ns_iters is visibly consumed by ops.fused_retract (the recorded op count
+    scales with ns_iters)."""
+    from repro.obs import estimates as est
+
+    d, r = TINY["fused_retract"]
+    monkeypatch.setenv("REPRO_TUNE", "search")
+    entry = tune.autotune("fused_retract", (d, r), "float32")
+
+    import jax
+    x, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (d, r)))
+    g = jax.random.normal(jax.random.PRNGKey(1), (d, r))
+
+    def recorded_ops():
+        with est.collect() as c:
+            ops.fused_retract(x, g)
+        return c.snapshot()["fused_retract"]["ops"]
+
+    monkeypatch.setenv("REPRO_TUNE", "load")
+    tuned_ops = recorded_ops()
+    monkeypatch.setenv("REPRO_TUNE", "off")
+    default_ops = recorded_ops()
+    ns = entry["config"]["ns_iters"]
+    if ns != tune.DEFAULTS["fused_retract"]["ns_iters"]:
+        assert tuned_ops != default_ops
+    assert tuned_ops == est.fused_retract_est(d, r, ns_iters=ns).ops
+
+
+def test_cli_demo_and_force(tune_dir, monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_TUNE", "search")
+    assert tune.main(["--kernel", "ring_mix:16x256"]) == 0
+    out = capsys.readouterr().out
+    assert "ring_mix|16x256|float32" in out
+    with open(tune.cache_path()) as f:
+        assert json.load(f)["searches"] == 1
+    # cache hit: no new search
+    assert tune.main(["--kernel", "ring_mix:16x256"]) == 0
+    with open(tune.cache_path()) as f:
+        assert json.load(f)["searches"] == 1
+    # --force re-searches
+    assert tune.main(["--kernel", "ring_mix:16x256", "--force"]) == 0
+    with open(tune.cache_path()) as f:
+        assert json.load(f)["searches"] == 2
+
+
+def test_clear_removes_cache(tune_dir, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE", "search")
+    tune.autotune("ring_mix", TINY["ring_mix"], "float32")
+    assert os.path.exists(tune.cache_path())
+    tune.clear()
+    assert not os.path.exists(tune.cache_path())
