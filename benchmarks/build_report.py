@@ -101,11 +101,14 @@ def _note(r: dict) -> str:
     return "compute-bound: near roofline, MXU utilization is the lever"
 
 
-def telemetry_section(obs: dict | None) -> str:
-    """§Telemetry from experiments/bench/obs.json: step-time breakdown +
-    per-round wire bytes.  Empty string when the obs bench hasn't run."""
-    if not obs:
+def telemetry_section(obs: dict | None, serve: dict | None = None) -> str:
+    """§Telemetry from experiments/bench/obs.json (step-time breakdown +
+    per-round wire bytes) and experiments/bench/serve.json (decode service
+    throughput/latency + replica drift).  Empty when neither bench ran."""
+    if not obs and not serve:
         return ""
+    if not obs:
+        return "## §Telemetry\n\n" + _serve_rows(serve)
     out = ["## §Telemetry\n"]
     out.append(
         f"`benchmarks/run.py obs` — DRGDA, {obs['n_nodes']} nodes, ring, "
@@ -157,6 +160,42 @@ def telemetry_section(obs: dict | None) -> str:
                        f"| {_fmt_bytes(rec['mem'])} "
                        f"| {rec['intensity']:.1f} |")
         out.append("")
+    if serve:
+        out.append(_serve_rows(serve))
+    return "\n".join(out)
+
+
+def _serve_rows(serve: dict) -> str:
+    """Decode-service rows: throughput/latency vs slots, continuous-vs-
+    static race, paged-kernel accuracy, 2-replica drift trace."""
+    out = [
+        f"Decode service (`benchmarks/run.py serve` — {serve['arch']}, "
+        f"page_size {serve['page_size']}, continuous batching over the "
+        f"paged KV cache):\n",
+        "| n_slots | tok/s | p50 ms | p99 ms | ttft p50 ms | waves |",
+        "|---|---|---|---|---|---|",
+    ]
+    for n, r in sorted(serve["per_batch"].items(), key=lambda kv: int(kv[0])):
+        out.append(f"| {n} | {r['tok_per_s']:.0f} | {r['p50_ms']:.0f} "
+                   f"| {r['p99_ms']:.0f} | {r['ttft_p50_ms']:.0f} "
+                   f"| {r['steps']} |")
+    cont, stat = serve["continuous"], serve["static"]
+    out.append(
+        f"\n* continuous vs static refill (same workload, same slots): "
+        f"**{serve['speedup_vs_static']:.2f}x** tok/s "
+        f"({cont['tok_per_s']:.0f} vs {stat['tok_per_s']:.0f}), p99 "
+        f"{cont['p99_ms']:.0f} vs {stat['p99_ms']:.0f} ms")
+    out.append(
+        f"* paged-decode kernel vs oracle (ragged slots, fp32): max err "
+        f"**{serve['kernel_max_err']:.1e}**")
+    rep = serve["replica"]
+    trace = " -> ".join(f"{d:.4f}" for d in rep["drift_trace"])
+    wire = rep["wire"]
+    frac = wire["wire_bytes"] / max(wire["raw_bytes"], 1)
+    out.append(
+        f"* {rep['n_replicas']}-replica EF-int8 gossip sync: drift "
+        f"{rep['drift_injected']:.4f} -> {trace} "
+        f"(bounded, monotone; int8 wire = {frac:.0%} of raw)\n")
     return "\n".join(out)
 
 
@@ -208,9 +247,9 @@ def load_obs() -> dict | None:
     return _load_bench("obs")
 
 
-def build(recs, obs=None, tune=None) -> str:
+def build(recs, obs=None, tune=None, serve=None) -> str:
     text = dryrun_section(recs) + "\n" + roofline_section(recs)
-    for section in (telemetry_section(obs), autotune_section(tune)):
+    for section in (telemetry_section(obs, serve), autotune_section(tune)):
         if section:
             text += "\n" + section
     return text
@@ -222,7 +261,8 @@ if __name__ == "__main__":
                     help="rewrite the §Dry-run/§Roofline block in EXPERIMENTS.md")
     args = ap.parse_args()
     recs = load_records()
-    text = build(recs, obs=load_obs(), tune=_load_bench("tune"))
+    text = build(recs, obs=load_obs(), tune=_load_bench("tune"),
+                 serve=_load_bench("serve"))
     if args.write:
         path = os.path.join(ROOT, "EXPERIMENTS.md")
         marker_a = "<!-- AUTOGEN:DRYRUN-ROOFLINE:BEGIN -->"

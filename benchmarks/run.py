@@ -22,6 +22,9 @@ so regressions are visible across revisions without diffing payloads.
   complexity  — Theorem-1 decay-rate sanity (log-log slope of M_t)
   roofline    — dry-run roofline table summary (reads experiments/dryrun)
   obs         — telemetry overhead + counter-vs-estimate agreement
+  serve       — decode service: tokens/sec + p99 latency vs batch size,
+                continuous vs static batching, paged-kernel accuracy,
+                2-replica gossip drift (writes experiments/bench/serve.json)
 """
 from __future__ import annotations
 
@@ -261,6 +264,18 @@ def bench_obs():
     return res["us_per_step_on"], derived
 
 
+def bench_serve():
+    from benchmarks import serve
+    res = serve.run()
+    _save("serve", res)
+    derived = (f"tok_per_s={res['continuous']['tok_per_s']:.1f};"
+               f"p99_ms={res['continuous']['p99_ms']:.1f};"
+               f"speedup_vs_static={res['speedup_vs_static']:.2f};"
+               f"kernel_max_err={res['kernel_max_err']:.2e};"
+               f"drift_final={res['replica']['drift_final']:.2e}")
+    return res["us_per_token"], derived
+
+
 ALL = {
     "fair_det": bench_fair_det,
     "fair_stoch": bench_fair_stoch,
@@ -273,6 +288,7 @@ ALL = {
     "complexity": bench_complexity,
     "roofline": bench_roofline,
     "obs": bench_obs,
+    "serve": bench_serve,
 }
 
 

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import multi_hop_mix as _mh
+from repro.kernels import paged_decode as _pd
 from repro.kernels import quant_mix as _qm
 from repro.kernels import ref
 from repro.kernels import retract as _rt
@@ -68,18 +69,37 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     kv_positions: Array | None = None,
                     softmax_scale: float | None = None,
                     impl: str | None = None,
-                    block_q: int = _fa.DEFAULT_BLOCK_Q,
-                    block_kv: int = _fa.DEFAULT_BLOCK_KV) -> Array:
-    """Attention over (B, S, H, hd) q and (B, T, Hkv, hd) k/v."""
+                    block_q: int | None = None,
+                    block_kv: int | None = None) -> Array:
+    """Attention over (B, S, H, hd) q and (B, T, Hkv, hd) k/v.
+
+    ``block_q`` / ``block_kv`` default to the tuned config for this
+    (B, S, T, H, hd, dtype) key when one is cached (see ``kernels/tune.py``;
+    on the ref path the tuned ``block_kv`` drives the streaming chunk), else
+    the hand-picked module defaults; explicit values always win.
+    """
     impl = impl or _default_impl()
+    tuned = {}
+    if block_q is None or block_kv is None:
+        tuned = _tune.lookup(
+            "flash_attention",
+            (q.shape[0], q.shape[1], k.shape[1], q.shape[2], q.shape[3]),
+            str(q.dtype)) or {}
+    if block_q is None:
+        block_q = tuned.get("block_q", _fa.DEFAULT_BLOCK_Q)
+    if block_kv is None:
+        block_kv = tuned.get("block_kv")          # None => ref default chunk
     _est.record("flash_attention", _est.flash_attention_est(
         q.shape[0], q.shape[1], k.shape[1], q.shape[2], q.shape[3],
         causal=causal, window=window, block_q=block_q,
         itemsize=_itemsize(q)))
     if impl == "ref":
+        kw = {} if block_kv is None else {"chunk": block_kv}
         return ref.blockwise_attention(
             q, k, v, causal=causal, window=window, q_positions=q_positions,
-            kv_positions=kv_positions, softmax_scale=softmax_scale)
+            kv_positions=kv_positions, softmax_scale=softmax_scale, **kw)
+    if block_kv is None:
+        block_kv = _fa.DEFAULT_BLOCK_KV
     if impl == "ref_naive":
         return ref.attention_naive(
             q, k, v, causal=causal, window=window, q_positions=q_positions,
@@ -110,6 +130,54 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         interpret=(impl == "pallas_interpret"))
     out = jnp.swapaxes(out, 1, 2)
     return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# paged-decode attention — the serving path's block-table gather kernel
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
+                           block_table: Array, seq_lens: Array, *,
+                           window: int | None = None,
+                           softmax_scale: float | None = None,
+                           impl: str | None = None,
+                           pages_per_block: int | None = None) -> Array:
+    """One decode step for S slots over a paged KV pool.
+
+    q (S, H, hd); pools (P, page_size, Hkv, hd/hdv); block_table (S, M)
+    int32 (-1 = unallocated); seq_lens (S,) int32 (valid tokens, the query
+    sits at ``seq_lens - 1``).  Returns (S, H, hdv).
+
+    ``pages_per_block`` (pages fused per kernel grid step) defaults to the
+    tuned config for this (S, M, page_size, hd, dtype) key when one is
+    cached, else 1; the block table is padded with -1 columns so the knob
+    always tiles.
+    """
+    impl = impl or _default_impl()
+    s_slots, h, hd = q.shape
+    ps, hkv = k_pages.shape[1], k_pages.shape[2]
+    m_pages = block_table.shape[1]
+    _est.record("paged_decode", _est.paged_decode_est(
+        s_slots, h, hkv, hd, m_pages, ps, itemsize=_itemsize(q)))
+    if impl in ("ref", "ref_naive"):
+        return ref.paged_decode_attention_ref(
+            q, k_pages, v_pages, block_table, seq_lens, window=window,
+            softmax_scale=softmax_scale)
+
+    if pages_per_block is None:
+        tuned = _tune.lookup("paged_decode", (s_slots, m_pages, ps, hd),
+                             str(q.dtype)) or {}
+        pages_per_block = tuned.get("pages_per_block",
+                                    _pd.DEFAULT_PAGES_PER_BLOCK)
+    bt, _ = _pad_to(block_table, 1, max(pages_per_block, 1), value=-1)
+    group = h // hkv
+    qg = q.reshape(s_slots, hkv, group, hd)
+    out = _pd.paged_decode_shgd(
+        qg, k_pages, v_pages, bt, seq_lens, window=window,
+        softmax_scale=softmax_scale, pages_per_block=pages_per_block,
+        interpret=(impl == "pallas_interpret"))
+    return out.reshape(s_slots, h, v_pages.shape[-1])
 
 
 # ---------------------------------------------------------------------------

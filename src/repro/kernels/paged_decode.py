@@ -1,0 +1,157 @@
+"""Paged-decode flash attention Pallas TPU kernel (block-table gather).
+
+The serving path's KV cache is *paged* (``repro.serve.kv_cache``): each
+decode slot owns a row of a block table whose entries index fixed-size
+pages ``(page_size, Hkv, hd)`` inside one shared pool.  This kernel runs
+one decode step for every slot — q is a single token per slot — attending
+over that slot's pages with an online softmax, **gathering pages through
+the block table inside the kernel**: the table and the per-slot sequence
+lengths ride as scalar-prefetch operands (SMEM), so every k/v BlockSpec
+index_map can pick the next physical page while the previous block is
+still being computed.
+
+Layout: q ``(S, Hkv, G, hd)`` (S slots, G = n_heads // n_kv_heads query
+heads per kv head); pools ``(P, page_size, Hkv, hd)``; block table
+``(S, M)`` int32 (-1 = unallocated; reads clamp to page 0, the dump page,
+and are fully masked); seq_lens ``(S,)`` int32 — valid tokens including
+the current query token at position ``seq_lens - 1``.
+
+Grid: ``(S, Hkv, M // pages_per_block)`` with the page loop innermost —
+TPU grid execution is sequential there, so the (acc, m, l) VMEM scratch
+persists across page steps exactly like ``flash_attention``'s kv loop.
+``pages_per_block`` fuses several page fetches per grid step (the tuned
+knob, see ``kernels/tune.py``) by passing the pool once per fused page
+with staggered index_maps.
+
+Validated on CPU with ``interpret=True`` against
+``ref.paged_decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+DEFAULT_PAGES_PER_BLOCK = 1
+
+
+def _paged_kernel(bt_ref, sl_ref, q_ref, *refs, scale: float,
+                  window: int | None, n_blocks: int, g_pages: int,
+                  page_size: int):
+    k_refs = refs[:g_pages]
+    v_refs = refs[g_pages:2 * g_pages]
+    o_ref = refs[2 * g_pages]
+    acc_ref, m_ref, l_ref = refs[2 * g_pages + 1:]
+    i = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    sl = sl_ref[i]                                       # valid tokens
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, hd)
+    k = jnp.concatenate([r[0, :, 0, :] for r in k_refs], axis=0) \
+        .astype(jnp.float32)                             # (g_pages*ps, hd)
+    v = jnp.concatenate([r[0, :, 0, :] for r in v_refs], axis=0) \
+        .astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, span)
+
+    span = g_pages * page_size
+    pos = j * span + jax.lax.broadcasted_iota(jnp.int32, (1, span), 1)
+    mask = pos < sl                                      # (1, span)
+    if window is not None:
+        # the query sits at position sl - 1
+        mask &= (sl - 1 - pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    # fully-masked spans (empty slots / dump pages): keep rows exactly zero
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softmax_scale", "pages_per_block",
+                     "interpret"))
+def paged_decode_shgd(q: Array, k_pages: Array, v_pages: Array,
+                      block_table: Array, seq_lens: Array, *,
+                      window: int | None = None,
+                      softmax_scale: float | None = None,
+                      pages_per_block: int = DEFAULT_PAGES_PER_BLOCK,
+                      interpret: bool = False) -> Array:
+    """q: (S, Hkv, G, hd); pools (P, ps, Hkv, hd/hdv); block_table (S, M)
+    int32; seq_lens (S,) int32.  Returns (S, Hkv, G, hdv).
+
+    ``M % pages_per_block == 0`` (ops.py pads the table with -1 columns);
+    hd should be a multiple of 128 for MXU alignment on real hardware
+    (any hd works in interpret mode).
+    """
+    s_slots, hkv, group, hd = q.shape
+    n_pages, ps, _, _ = k_pages.shape
+    hdv = v_pages.shape[-1]
+    m_pages = block_table.shape[1]
+    g = pages_per_block
+    assert m_pages % g == 0, (m_pages, g)
+    n_blocks = m_pages // g
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+
+    grid = (s_slots, hkv, n_blocks)
+
+    def page_map(off):
+        # scalar-prefetch index_map: clamp -1 (unallocated) to the dump
+        # page 0 — those positions are >= seq_len and fully masked anyway
+        def index(i, kh, j, bt, sl):
+            return (jnp.maximum(bt[i, j * g + off], 0), 0, kh, 0)
+        return index
+
+    in_specs = [pl.BlockSpec((1, 1, group, hd),
+                             lambda i, kh, j, bt, sl: (i, kh, 0, 0))]
+    in_specs += [pl.BlockSpec((1, ps, 1, hd), page_map(off))
+                 for off in range(g)]
+    in_specs += [pl.BlockSpec((1, ps, 1, hdv), page_map(off))
+                 for off in range(g)]
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               n_blocks=n_blocks, g_pages=g, page_size=ps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, group, hdv),
+                               lambda i, kh, j, bt, sl: (i, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, hdv), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_slots, hkv, group, hdv), q.dtype),
+        interpret=interpret,
+        name="paged_decode",
+    )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q, *([k_pages] * g), *([v_pages] * g))

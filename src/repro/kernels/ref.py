@@ -122,6 +122,38 @@ def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: Array, k_pages: Array, v_pages: Array,
+                               block_table: Array, seq_lens: Array, *,
+                               window: int | None = None,
+                               softmax_scale: float | None = None) -> Array:
+    """Oracle for the paged-decode kernel: gather every slot's pages through
+    the block table into a contiguous (S, M*ps, Hkv, hd) view, then run the
+    streaming attention oracle with positions derived from the page layout.
+
+    q (S, H, hd) — one query token per slot; pools (P, ps, Hkv, hd/hdv);
+    block_table (S, M) int32 (-1 = unallocated, clamped to page 0 and fully
+    masked); seq_lens (S,) int32 — valid tokens, query at ``seq_lens - 1``.
+    A slot with ``seq_lens == 0`` returns exact zeros (all keys masked).
+    """
+    s_slots = q.shape[0]
+    ps, hkv, hd = k_pages.shape[1:]
+    hdv = v_pages.shape[-1]
+    m_pages = block_table.shape[1]
+    bt = jnp.maximum(block_table, 0)
+    k = k_pages[bt].reshape(s_slots, m_pages * ps, hkv, hd)
+    v = v_pages[bt].reshape(s_slots, m_pages * ps, hkv, hdv)
+    pos = jnp.arange(m_pages * ps, dtype=jnp.int32)[None, :]
+    kv_pos = jnp.where(pos < seq_lens[:, None], pos, -1)
+    q_pos = seq_lens[:, None].astype(jnp.int32) - 1
+    out = blockwise_attention(q[:, None], k, v, causal=True, window=window,
+                              q_positions=q_pos, kv_positions=kv_pos,
+                              softmax_scale=softmax_scale)[:, 0]
+    # fully-masked slots: the streaming softmax degenerates to a mean over
+    # dump-page values; pin them to the kernel's exact-zero convention
+    return jnp.where(seq_lens[:, None, None] > 0, out,
+                     jnp.zeros_like(out))
+
+
 # ---------------------------------------------------------------------------
 # Stiefel tangent projection
 # ---------------------------------------------------------------------------

@@ -49,6 +49,8 @@ DEFAULTS = {
     "multi_hop_mix": {"block_f": 1024},
     "multi_hop_mix_quant": {"block_f": 1024},
     "fused_retract": {"block_d": 256, "ns_iters": 20},
+    "flash_attention": {"block_q": 128, "block_kv": 128},
+    "paged_decode": {"pages_per_block": 1},
 }
 
 #: candidate spaces (the default is always included and is the fallback)
@@ -62,7 +64,28 @@ SPACES = {
                             for v in (4096, 2048, 1024, 512, 256, 128)],
     "fused_retract": [{"block_d": d, "ns_iters": n}
                       for n in (10, 12, 16, 20) for d in (128, 256, 512)],
+    "flash_attention": [{"block_q": bq, "block_kv": bk}
+                        for bq in (64, 128, 256)
+                        for bk in (64, 128, 256, 512)],
+    "paged_decode": [{"pages_per_block": g} for g in (1, 2, 4, 8)],
 }
+
+#: kernels whose every candidate (default included) is accuracy-gated
+#: against an *independent* oracle rather than the default config's output
+ORACLE_GATED = ("flash_attention", "paged_decode")
+
+#: knobs that still change the dispatched computation on the oracle (ref)
+#: path — candidates differing only in other knobs are deduped there.
+#: ``fused_retract``'s ns_iters is real work everywhere; flash attention's
+#: block_kv drives the streaming oracle's chunk size.
+REF_KNOBS = {
+    "fused_retract": ("ns_iters",),
+    "flash_attention": ("block_kv",),
+}
+
+#: fixed head geometry for the paged-decode probe (the cache key carries
+#: (slots, pages, page_size, hd); heads only rescale every candidate alike)
+PAGED_PROBE_HEADS = (4, 2)      # (h, hkv) — exercises GQA grouping
 
 #: relative tolerance for accuracy-gated configs (vs the default config's
 #: output on the same probe inputs)
@@ -200,6 +223,27 @@ def _probe_inputs(kernel: str, shape: tuple, dtype: Any, extra: dict):
         x, _ = jnp.linalg.qr(jax.random.normal(ks[0], (d, r), jnp.float32))
         g = jax.random.normal(ks[1], (d, r), jnp.float32)
         return (x.astype(dtype), g.astype(dtype))
+    if kernel == "flash_attention":
+        b, s, t, h, hd = shape
+        mk = lambda i, *sh: jax.random.normal(ks[i], sh, jnp.float32) \
+            .astype(dtype)
+        return (mk(0, b, s, h, hd), mk(1, b, t, h, hd), mk(2, b, t, h, hd))
+    if kernel == "paged_decode":
+        s, m, ps, hd = shape
+        h, hkv = PAGED_PROBE_HEADS
+        n_pages = s * m + 1                      # + the dump page
+        q = jax.random.normal(ks[0], (s, h, hd), jnp.float32).astype(dtype)
+        kp = jax.random.normal(ks[1], (n_pages, ps, hkv, hd),
+                               jnp.float32).astype(dtype)
+        vp = jax.random.normal(ks[2], (n_pages, ps, hkv, hd),
+                               jnp.float32).astype(dtype)
+        # ragged slots: slot i holds ~ (i+1)/s of the max context
+        seq = jnp.asarray([max(1, ((i + 1) * m * ps) // s)
+                           for i in range(s)], jnp.int32)
+        bt = jnp.asarray(
+            [[1 + i * m + j if j * ps < int(seq[i]) else -1
+              for j in range(m)] for i in range(s)], jnp.int32)
+        return (q, kp, vp, bt, seq)
     raise ValueError(f"no probe for kernel {kernel!r}")
 
 
@@ -260,7 +304,30 @@ def _probe_fn(kernel: str, shape: tuple, config: dict, extra: dict,
                                  block_d=config["block_d"],
                                  ns_iters=config["ns_iters"],
                                  interpret=interp)
+    # the attention kernels route through their ops.py wrappers — explicit
+    # block args skip the tune lookup, so probing never recurses into the
+    # cache being built
+    from repro.kernels import ops as _ops
+    if kernel == "flash_attention":
+        return jax.jit(functools.partial(
+            _ops.flash_attention, causal=True, impl=impl,
+            block_q=config["block_q"], block_kv=config["block_kv"]))
+    if kernel == "paged_decode":
+        return jax.jit(functools.partial(
+            _ops.paged_decode_attention, impl=impl,
+            pages_per_block=config["pages_per_block"]))
     raise ValueError(f"no probe for kernel {kernel!r}")
+
+
+def _oracle_fn(kernel: str):
+    """The independent accuracy oracle for ORACLE_GATED kernels."""
+    from repro.kernels import ref
+    if kernel == "flash_attention":
+        import functools
+        return functools.partial(ref.attention_naive, causal=True)
+    if kernel == "paged_decode":
+        return ref.paged_decode_attention_ref
+    raise ValueError(kernel)
 
 
 def _default_for_shape(kernel: str, shape: tuple) -> dict:
@@ -336,6 +403,14 @@ def _estimate(kernel: str, shape: tuple, config: dict, extra: dict):
     if kernel == "fused_retract":
         return est.fused_retract_est(shape[0], shape[1],
                                      ns_iters=config.get("ns_iters", 20))
+    if kernel == "flash_attention":
+        b, s, t, h, hd = shape
+        return est.flash_attention_est(b, s, t, h, hd,
+                                       block_q=config.get("block_q", 128))
+    if kernel == "paged_decode":
+        s, m, ps, hd = shape
+        h, hkv = PAGED_PROBE_HEADS
+        return est.paged_decode_est(s, h, hkv, hd, m, ps)
     raise ValueError(kernel)
 
 
@@ -362,27 +437,36 @@ def autotune(kernel: str, shape: tuple, dtype: Any,
     impl = _dispatch_impl()
     default = _default_for_shape(kernel, shape)
     args = _probe_inputs(kernel, shape, dtype, extra)
-    gated = "ns_iters" in default
+    # two gating flavors: self-gated kernels (ns_iters changes the math, so
+    # non-default candidates compare against the default config's output);
+    # ORACLE_GATED kernels check *every* candidate — default included —
+    # against an independent reference oracle
+    oracle = kernel in ORACLE_GATED
+    gated = oracle or "ns_iters" in default
     ref_out = None
-    if gated:
+    if oracle:
+        ref_out = np.asarray(_oracle_fn(kernel)(*args))
+    elif gated:
         ref_out = np.asarray(
             _probe_fn(kernel, shape, default, extra, impl)(*args))
+    if gated:
         ref_scale = max(1.0, float(np.max(np.abs(ref_out))))
 
     candidates = []
     seen: set[tuple] = set()
+    ref_knobs = REF_KNOBS.get(kernel, ())
     for cfg in [default] + SPACES[kernel]:
         # on the oracle path only math-bearing knobs differentiate
         # candidates (block shapes are no-ops there) — dedupe so the search
         # stays cheap; the default always survives as the first entry
         sig = tuple(sorted(cfg.items())) if impl != "ref" else \
-            tuple(sorted((n, v) for n, v in cfg.items() if n == "ns_iters"))
+            tuple(sorted((n, v) for n, v in cfg.items() if n in ref_knobs))
         if sig in seen or not _feasible(kernel, shape, cfg):
             continue
         seen.add(sig)
         fn = _probe_fn(kernel, shape, cfg, extra, impl)
         rec = {"config": cfg, "us": _time_us(fn, args)}
-        if gated and cfg != default:
+        if gated and (oracle or cfg != default):
             err = float(np.max(np.abs(np.asarray(fn(*args)) - ref_out)))
             rec["max_abs_err"] = err
             rec["accurate"] = bool(err <= ACCURACY_RTOL * ref_scale)
@@ -391,10 +475,14 @@ def autotune(kernel: str, shape: tuple, dtype: Any,
     default_us = next(c["us"] for c in candidates
                       if c["config"] == default)
     ok = [c for c in candidates if c.get("accurate", True)]
+    if not ok:
+        raise RuntimeError(
+            f"{kernel}: no candidate met the accuracy gate "
+            f"(rtol={ACCURACY_RTOL}) — kernel/oracle mismatch")
     best = min(ok, key=lambda c: c["us"])
     if best["config"] != default and \
             best["us"] > default_us * (1.0 - HYSTERESIS):
-        best = next(c for c in ok if c["config"] == default)
+        best = next((c for c in ok if c["config"] == default), best)
 
     est = _estimate(kernel, shape, best["config"], extra)
     entry = {
@@ -425,6 +513,8 @@ DEMO_SHAPES = [
     ("ring_mix", (64, 1024), "float32", None),
     ("multi_hop_mix", (16, 1024), "float32", {"hops": 3}),
     ("fused_retract", (256, 64), "float32", None),
+    ("flash_attention", (1, 128, 128, 4, 64), "float32", None),
+    ("paged_decode", (4, 8, 16, 64), "float32", None),
 ]
 
 

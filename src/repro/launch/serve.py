@@ -35,7 +35,10 @@ def generate(cfg, params, prompt_tokens, n_new: int, *,
             return jnp.argmax(lg, axis=-1)
         return jax.random.categorical(key, lg / temperature, axis=-1)
 
-    tok = sample(logits[:, -1], key)
+    # split before the first draw — sampling with `key` itself and then
+    # splitting it would correlate the first token with later ones
+    key, sub = jax.random.split(key)
+    tok = sample(logits[:, -1], sub)
     out = [tok]
     for i in range(n_new - 1):
         key, sub = jax.random.split(key)
@@ -50,6 +53,62 @@ def generate(cfg, params, prompt_tokens, n_new: int, *,
     return jnp.stack(out, axis=1)
 
 
+def _serve_engine(cfg, params, args) -> dict:
+    """The paged decode service (``repro.serve``): continuous batching over
+    a fixed-slot batch with block-table paged KV pools."""
+    from repro.serve import (ContinuousBatchingScheduler, PagedKVSpec,
+                             Request, ServeEngine, serve_requests)
+    ps = args.page_size
+    spec = PagedKVSpec(
+        page_size=ps,
+        n_pages=args.batch * (-(-(args.prompt_len + args.new_tokens) // ps))
+        * 2 + 1,
+        max_pages_per_slot=-(-(args.prompt_len + args.new_tokens) // ps))
+    engine = ServeEngine(cfg, params, kv_spec=spec, n_slots=args.batch,
+                         temperature=args.temperature, seed=args.seed)
+    sched = ContinuousBatchingScheduler(args.batch, spec)
+    key = jax.random.PRNGKey(args.seed + 1)
+    reqs = [Request(prompt=jax.random.randint(
+                jax.random.fold_in(key, i), (args.prompt_len,), 0,
+                cfg.vocab_size).tolist(),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.batch)]
+    t0 = time.time()
+    fin = serve_requests(engine, sched, reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(r.tokens) for r in fin)
+    return {
+        "arch": cfg.name, "mode": "paged", "batch": args.batch,
+        "new_tokens": args.new_tokens, "wall_s": round(dt, 2),
+        "tok_per_s": round(n_tok / dt, 1),
+        "sample": fin[0].tokens[:8],
+    }
+
+
+def _serve_legacy(cfg, params, args) -> dict:
+    """Contiguous-cache batched decode (the pre-paging path; still the only
+    one for MLA / SSM / cross-attention architectures)."""
+    key = jax.random.PRNGKey(args.seed)
+    shape = (args.batch, args.prompt_len) if cfg.n_codebooks == 1 else \
+        (args.batch, args.prompt_len, cfg.n_codebooks)
+    prompt = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    fe = None
+    if cfg.frontend is not None:
+        fe = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+    t0 = time.time()
+    toks = generate(cfg, params, prompt, args.new_tokens,
+                    frontend_embeds=fe, temperature=args.temperature,
+                    seed=args.seed)
+    dt = time.time() - t0
+    return {
+        "arch": cfg.name, "mode": "legacy", "batch": args.batch,
+        "new_tokens": args.new_tokens, "wall_s": round(dt, 2),
+        "tok_per_s": round(args.batch * args.new_tokens / dt, 1),
+        "sample": toks[0].tolist()[:8],
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m", choices=configs.ARCH_IDS)
@@ -58,31 +117,22 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="force the contiguous-cache decode path")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
-    key = jax.random.PRNGKey(args.seed)
-    params = T.init_params(key, cfg)
-    shape = (args.batch, args.prompt_len) if cfg.n_codebooks == 1 else \
-        (args.batch, args.prompt_len, cfg.n_codebooks)
-    prompt = jax.random.randint(key, shape, 0, cfg.vocab_size)
-    fe = None
-    if cfg.frontend is not None:
-        fe = 0.1 * jax.random.normal(
-            key, (args.batch, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
-
-    t0 = time.time()
-    toks = generate(cfg, params, prompt, args.new_tokens,
-                    frontend_embeds=fe, temperature=args.temperature,
-                    seed=args.seed)
-    dt = time.time() - t0
-    print(json.dumps({
-        "arch": cfg.name, "batch": args.batch, "new_tokens": args.new_tokens,
-        "wall_s": round(dt, 2),
-        "tok_per_s": round(args.batch * args.new_tokens / dt, 1),
-        "sample": toks[0].tolist()[:8],
-    }))
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.legacy:
+        res = _serve_legacy(cfg, params, args)
+    else:
+        try:
+            res = _serve_engine(cfg, params, args)
+        except ValueError:      # non-GQA architecture: contiguous fallback
+            res = _serve_legacy(cfg, params, args)
+    print(json.dumps(res))
     return 0
 
 

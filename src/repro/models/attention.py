@@ -85,6 +85,38 @@ def gqa_decode(params, x: Array, cfg: ModelConfig, spec: AttnSpec,
     return y.reshape(b, 1, h * hd) @ params["wo"], cache
 
 
+def gqa_decode_paged(params, x: Array, cfg: ModelConfig, spec: AttnSpec,
+                     pos_bt, cache: dict):
+    """One-token decode against a paged KV pool (``repro.serve.kv_cache``).
+
+    ``pos_bt`` is ``(position, block_table)``: per-slot positions (S,) int32
+    of the *incoming* token, and the shared block table (S, M) int32 — they
+    ride together through ``decode_step``'s opaque ``position`` argument.
+    ``cache`` holds this layer's ``{"k_pages", "v_pages"}`` pools; the new
+    token's K/V are scattered into the slot's current page (inactive slots
+    land on the dump page 0), then attention runs through the block-table
+    gather kernel with ``seq_lens = position + 1``."""
+    position, block_table = pos_bt
+    s, _, _ = x.shape
+    hd, h, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ params["wq"]).reshape(s, 1, h, hd)
+    k = (x @ params["wk"]).reshape(s, 1, hkv, hd)
+    v = (x @ params["wv"]).reshape(s, 1, hkv, hd)
+    pos2 = position[:, None]
+    q = apply_rope(q, pos2, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_theta)
+
+    ps = cache["k_pages"].shape[1]
+    page = jnp.maximum(block_table[jnp.arange(s), position // ps], 0)
+    off = position % ps
+    kp = cache["k_pages"].at[page, off].set(k[:, 0])
+    vp = cache["v_pages"].at[page, off].set(v[:, 0])
+    y = ops.paged_decode_attention(q[:, 0], kp, vp, block_table,
+                                   position + 1, window=spec.sliding_window)
+    return (y.reshape(s, 1, h * hd) @ params["wo"],
+            {"k_pages": kp, "v_pages": vp})
+
+
 def cross_attend(params, x: Array, cfg: ModelConfig, frontend_kv: dict):
     """Cross-attention onto precomputed frontend K/V (not causal)."""
     b, s, d = x.shape

@@ -175,8 +175,15 @@ def apply_block(params: dict, cfg: ModelConfig, spec: BlockSpec, x: Array,
     if spec.kind in ("attn", "moe_attn"):
         a = spec.attn
         if mode == "decode":
-            fn = attn_mod.mla_decode if a.kind == "mla" else attn_mod.gqa_decode
-            y, cache = fn(params["attn"], h, cfg, a, positions, cache)
+            if a.kind != "mla" and isinstance(cache, dict) \
+                    and "k_pages" in cache:
+                # paged serving path: ``positions`` is (position, block_table)
+                y, cache = attn_mod.gqa_decode_paged(
+                    params["attn"], h, cfg, a, positions, cache)
+            else:
+                fn = attn_mod.mla_decode if a.kind == "mla" \
+                    else attn_mod.gqa_decode
+                y, cache = fn(params["attn"], h, cfg, a, positions, cache)
         else:
             fn = attn_mod.mla_prefill if a.kind == "mla" else attn_mod.gqa_prefill
             cl = attn_mod.attn_cache_len(a, cache_len or x.shape[1])

@@ -75,6 +75,22 @@ def flash_attention_est(b: int, s: int, t: int, h: int, hd: int, *,
     return Estimates(ops=ops, lds=lds, mem=mem)
 
 
+def paged_decode_est(s: int, h: int, hkv: int, hd: int, m_pages: int,
+                     page_size: int, *, itemsize: int = 4) -> Estimates:
+    """Paged-decode attention: one query token per slot over ``m_pages``
+    block-table pages of ``page_size`` tokens.  Same 4*hd+5 flop/score core
+    as flash attention; k/v pages stream once per (slot, kv-head) pair (the
+    grid revisits the pool per kv head), q/o are one token per slot."""
+    t = float(m_pages) * page_size
+    scores = float(s) * h * t
+    ops = scores * (4.0 * hd + 5.0)
+    qo = 2.0 * s * h * hd
+    kv = 2.0 * s * hkv * t * hd
+    lds = itemsize * (qo + kv)
+    mem = itemsize * (qo + kv)      # pages are slot-private (no sharing)
+    return Estimates(ops=ops, lds=lds, mem=mem)
+
+
 def stiefel_project_est(d: int, r: int, *, lead: int = 1,
                         itemsize: int = 4) -> Estimates:
     """P_{T_x}(g) = g - x sym(x^T g): two d x r x r matmuls + r^2 sym."""
@@ -145,6 +161,7 @@ def multi_hop_mix_est(rows: int, f: int, *, hops: int, out_rows: int,
 #: the registered estimators, keyed by the ops.py dispatch name
 KERNELS = {
     "flash_attention": flash_attention_est,
+    "paged_decode": paged_decode_est,
     "stiefel_project": stiefel_project_est,
     "fused_retract": fused_retract_est,
     "ring_mix": ring_mix_est,

@@ -1,0 +1,15 @@
+"""repro.serve: decentralized decode service.
+
+Continuous batching (``scheduler``), paged KV cache + block-table decode
+kernel (``kv_cache`` + ``kernels/paged_decode.py``), the fused jitted step
+(``engine``), and EF-int8 gossip weight-sync across replicas (``replica``).
+"""
+from repro.serve.engine import ServeEngine, serve_requests
+from repro.serve.kv_cache import PagePool, PagedKVSpec, init_pools
+from repro.serve.replica import ReplicaGroup
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+
+__all__ = [
+    "ContinuousBatchingScheduler", "PagePool", "PagedKVSpec", "ReplicaGroup",
+    "Request", "ServeEngine", "init_pools", "serve_requests",
+]

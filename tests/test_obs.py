@@ -306,7 +306,8 @@ def test_estimates_algebra():
     assert e.intensity == 10.0
     assert set(obs_est.KERNELS) == {"flash_attention", "stiefel_project",
                                     "fused_retract", "ring_mix", "quant_mix",
-                                    "multi_hop_mix", "multi_hop_mix_quant"}
+                                    "multi_hop_mix", "multi_hop_mix_quant",
+                                    "paged_decode"}
 
 
 # ---------------------------------------------------------------------------
