@@ -235,6 +235,31 @@ def autotune_section(tune: dict | None) -> str:
     return "\n".join(out)
 
 
+def analysis_section(analysis: dict | None) -> str:
+    """§Static analysis from experiments/bench/analysis.json (written by
+    ``python -m repro.analysis``): pass/finding counts per analysis pass.
+    Empty string when the CLI hasn't run."""
+    if not analysis or "passes" not in analysis:
+        return ""
+    out = ["## §Static analysis\n"]
+    out.append(
+        f"`python -m repro.analysis` on `{analysis.get('hw', '?')}` — jaxpr\n"
+        "lint (weak-type-leak / effect-in-quiet-path / donation-miss /\n"
+        "comm-schedule), Pallas VMEM + tiling + oracle-coverage checks, and\n"
+        "the doubly-stochastic / manifold-feasibility contract validators\n"
+        "over the registered entry points.  Nonzero findings fail CI.\n")
+    out.append("| pass | findings |")
+    out.append("|---|---|")
+    for name, findings in analysis["passes"].items():
+        cell = "ok" if not findings else "; ".join(
+            f"[{f['rule']}] {f['where']}" for f in findings[:4])
+        out.append(f"| {name} | {cell} |")
+    out.append(f"\ntotal findings: {analysis.get('n_findings', '?')} "
+               f"({analysis.get('elapsed_s', '?')}s)")
+    out.append("")
+    return "\n".join(out)
+
+
 def _load_bench(name: str) -> dict | None:
     path = os.path.join(ROOT, "experiments", "bench", f"{name}.json")
     if not os.path.exists(path):
@@ -247,9 +272,10 @@ def load_obs() -> dict | None:
     return _load_bench("obs")
 
 
-def build(recs, obs=None, tune=None, serve=None) -> str:
+def build(recs, obs=None, tune=None, serve=None, analysis=None) -> str:
     text = dryrun_section(recs) + "\n" + roofline_section(recs)
-    for section in (telemetry_section(obs, serve), autotune_section(tune)):
+    for section in (telemetry_section(obs, serve), autotune_section(tune),
+                    analysis_section(analysis)):
         if section:
             text += "\n" + section
     return text
@@ -262,7 +288,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     recs = load_records()
     text = build(recs, obs=load_obs(), tune=_load_bench("tune"),
-                 serve=_load_bench("serve"))
+                 serve=_load_bench("serve"), analysis=_load_bench("analysis"))
     if args.write:
         path = os.path.join(ROOT, "EXPERIMENTS.md")
         marker_a = "<!-- AUTOGEN:DRYRUN-ROOFLINE:BEGIN -->"

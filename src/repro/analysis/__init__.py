@@ -1,0 +1,24 @@
+"""repro.analysis — static analysis over the repo's jitted surfaces.
+
+Three passes, one engine:
+
+* :mod:`~repro.analysis.jaxpr_lint` — pluggable rules over ClosedJaxprs
+  (``weak-type-leak``, ``effect-in-quiet-path``, ``donation-miss``,
+  ``comm-schedule``) plus the runtime :class:`RecompileSentinel`;
+* :mod:`~repro.analysis.kernel_check` — VMEM footprints vs the
+  :class:`~repro.launch.roofline.HardwareModel` budget, tiling contracts,
+  and the oracle-coverage gate over ``kernels/ops.py``;
+* :mod:`~repro.analysis.contracts` — doubly-stochastic W_t and manifold
+  feasibility validators.
+
+CLI: ``python -m repro.analysis [--rules ...] [--hw tpu_v5e]`` exits
+nonzero on violations; ``--selftest`` proves each pass fires on seeded
+known-bad fixtures.  Tests consume the same engine via
+:func:`assert_jaxpr_rule`.
+"""
+from repro.analysis.jaxpr_lint import (Finding, LintTarget,  # noqa: F401
+                                       RecompileError, RecompileSentinel,
+                                       RULES, assert_jaxpr_rule,
+                                       count_primitive, iter_eqns,
+                                       kernel_call_sites, lint)
+from repro.analysis import contracts, kernel_check  # noqa: F401

@@ -1,0 +1,81 @@
+"""CLI: ``python -m repro.analysis [--rules ...] [--hw tpu_v5e]``.
+
+Runs every registered analysis pass over the repo's entry points and exits
+nonzero on violations.  ``--selftest`` instead verifies the analyzers fire
+on seeded known-bad fixtures (weak_type init leaf, over-VMEM block config,
+sub-stochastic W_t, collapsed donation, quiet-path io_callback) — the CI
+``analysis`` job runs both modes.  ``--json`` writes the findings summary
+(default ``experiments/bench/analysis.json``, consumed by
+``benchmarks/build_report.py`` §Static analysis).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.analysis import entrypoints
+from repro.launch import roofline
+
+_DEFAULT_JSON = os.path.join("experiments", "bench", "analysis.json")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--rules", nargs="*", default=None,
+                    help="rule names to run (default: all); e.g. "
+                         "--rules weak-type-leak vmem-budget")
+    ap.add_argument("--hw", default=None, choices=sorted(roofline.HARDWARE),
+                    help="hardware model for the VMEM budget "
+                         "(default: REPRO_HW or tpu_v5e)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help=f"write a findings summary (default "
+                         f"{_DEFAULT_JSON}; '-' to skip)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify each pass fires on seeded bad fixtures")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        failures = entrypoints.selftest()
+        for f in failures:
+            print(f"SELFTEST FAIL: {f}")
+        if not failures:
+            print("selftest ok: every analyzer caught its seeded fixture")
+        return 1 if failures else 0
+
+    hw = roofline.get_hardware(args.hw)
+    rules = set(args.rules) if args.rules else None
+    t0 = time.time()
+    results = entrypoints.run_passes(rules=rules, hw=hw)
+    elapsed = time.time() - t0
+
+    n_findings = 0
+    for pass_name, findings in results.items():
+        status = "ok" if not findings else f"{len(findings)} finding(s)"
+        print(f"{pass_name:<20} {status}")
+        for f in findings:
+            print(f"  {f}")
+        n_findings += len(findings)
+
+    summary = {
+        "hw": hw.name,
+        "rules": sorted(rules) if rules else "all",
+        "elapsed_s": round(elapsed, 2),
+        "passes": {name: [f.to_json() for f in fs]
+                   for name, fs in results.items()},
+        "n_findings": n_findings,
+    }
+    json_path = args.json or _DEFAULT_JSON
+    if json_path != "-":
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as fh:
+            json.dump(summary, fh, indent=1)
+    print(f"{len(results)} passes, {n_findings} finding(s), "
+          f"{elapsed:.1f}s [{hw.name}]")
+    return 1 if n_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

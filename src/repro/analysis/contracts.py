@@ -1,0 +1,143 @@
+"""Numerical contract validators: doubly-stochastic W_t, manifold feasibility.
+
+The paper's Theorem 1 rates (DRGDA O(eps^-2), DRSGDA O(eps^-4)) assume the
+effective mixing matrix of every gossip round is symmetric doubly
+stochastic — including rounds where the :class:`~repro.comms.channel.
+ChannelModel` drops links or deactivates edges under a round-robin/matching
+schedule.  ``comms.channel`` maintains this by folding dropped off-diagonal
+weight back into the diagonal; these validators re-check the invariant
+numerically over seeded draws rather than trusting the construction.
+
+The manifold contracts do the same for the geometry layer: every registered
+manifold's retraction must land on the manifold (``check()`` small) from a
+random feasible point and tangent direction, for every retraction it
+advertises.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.jaxpr_lint import Finding
+
+__all__ = ["matrix_findings", "doubly_stochastic_findings",
+           "manifold_findings", "run"]
+
+
+def matrix_findings(w: Any, *, where: str = "W", tol: float = 1e-5,
+                    require_symmetric: bool = True) -> list[Finding]:
+    """Check one mixing matrix: row/col sums == 1, entries >= 0, symmetry."""
+    findings = []
+    w = np.asarray(w)
+    if w.ndim != 2 or w.shape[0] != w.shape[1]:
+        return [Finding("doubly-stochastic", where,
+                        f"not a square matrix: shape {w.shape}")]
+    rows = np.abs(w.sum(axis=1) - 1.0)
+    cols = np.abs(w.sum(axis=0) - 1.0)
+    if rows.max() > tol:
+        findings.append(Finding(
+            "doubly-stochastic", where,
+            f"row sums off by up to {rows.max():.2e} (tol {tol:.0e}); "
+            "dropped link weight is not being folded back into the diagonal"))
+    if cols.max() > tol:
+        findings.append(Finding(
+            "doubly-stochastic", where,
+            f"column sums off by up to {cols.max():.2e} (tol {tol:.0e})"))
+    if w.min() < -tol:
+        findings.append(Finding(
+            "doubly-stochastic", where,
+            f"negative entry {w.min():.2e}: self-weight underflow "
+            "(off-diagonal mass exceeds 1)"))
+    if require_symmetric and np.abs(w - w.T).max() > tol:
+        findings.append(Finding(
+            "doubly-stochastic", where,
+            f"asymmetric by {np.abs(w - w.T).max():.2e}; Theorem 1 needs "
+            "symmetric W_t"))
+    return findings
+
+
+def doubly_stochastic_findings(channel: Any, *, rounds: int = 100,
+                               seed: int = 0, tol: float = 1e-5,
+                               where: str = "channel",
+                               max_report: int = 5) -> list[Finding]:
+    """Every effective W_t a channel draws over ``rounds`` seeded gossip
+    rounds must stay symmetric doubly stochastic."""
+    findings = []
+    key = jax.random.PRNGKey(seed)
+    for rnd in range(rounds):
+        w_t = channel.w_t(rnd, jax.random.fold_in(key, rnd))
+        findings.extend(matrix_findings(
+            w_t, where=f"{where} round {rnd}", tol=tol))
+        if len(findings) >= max_report:
+            findings.append(Finding(
+                "doubly-stochastic", where,
+                f"stopping after {max_report} findings ({rounds - rnd - 1} "
+                "rounds unchecked)"))
+            break
+    return findings
+
+
+def channel_sweep_findings(*, n: int = 8, rounds: int = 20, seed: int = 0,
+                           tol: float = 1e-5) -> list[Finding]:
+    """Sweep topology x fault schedule: every combination the comms layer
+    supports must keep effective W_t doubly stochastic."""
+    from repro.comms.channel import ChannelModel
+    from repro.core import gossip
+    findings = []
+    for topology in ("ring", "full", "torus", "star"):
+        w = gossip.mixing_matrix(topology, n)
+        findings.extend(matrix_findings(w, where=f"{topology}(n={n})",
+                                        tol=tol))
+        for schedule in ("static", "round_robin", "matching"):
+            for drop, straggle in ((0.0, 0.0), (0.3, 0.0), (0.0, 0.3),
+                                   (0.25, 0.25)):
+                ch = ChannelModel(w, schedule=schedule, drop_rate=drop,
+                                  straggler_rate=straggle, topology=topology)
+                findings.extend(doubly_stochastic_findings(
+                    ch, rounds=rounds, seed=seed, tol=tol,
+                    where=f"{topology}/{schedule}/drop={drop}/"
+                          f"strag={straggle}"))
+    return findings
+
+
+def manifold_findings(*, seed: int = 0, d: int = 12, r: int = 4,
+                      step: float = 0.1, tol: float = 1e-4,
+                      names: Iterable[str] | None = None) -> list[Finding]:
+    """Retraction output must pass ``check()`` for every registered manifold
+    and every retraction it advertises, from seeded feasible points."""
+    from repro import geometry
+    findings = []
+    key = jax.random.PRNGKey(seed)
+    for name in sorted(names or geometry.REGISTRY):
+        m = geometry.REGISTRY[name]
+        k1, k2 = jax.random.split(jax.random.fold_in(key, hash(name) % 2**31))
+        x = m.rand(k1, d, r)
+        feas = float(m.check(x))
+        if not np.isfinite(feas) or feas > tol:
+            findings.append(Finding(
+                "manifold-feasibility", f"{name}.rand",
+                f"random point infeasible: check()={feas:.2e} (tol {tol:.0e})"))
+            continue
+        g = jax.random.normal(k2, x.shape, x.dtype)
+        u = m.tangent_project(x, g)
+        for kind in m.retractions:
+            y = m.retract(x, step * u, kind)
+            resid = float(m.check(y))
+            if not np.isfinite(resid) or resid > tol:
+                findings.append(Finding(
+                    "manifold-feasibility", f"{name}.retract[{kind}]",
+                    f"retraction leaves the manifold: check()={resid:.2e} "
+                    f"(tol {tol:.0e})"))
+            if not bool(jnp.all(jnp.isfinite(y))):
+                findings.append(Finding(
+                    "manifold-feasibility", f"{name}.retract[{kind}]",
+                    "retraction produced non-finite entries"))
+    return findings
+
+
+def run(*, rounds: int = 20) -> list[Finding]:
+    """All numerical contract validators."""
+    return channel_sweep_findings(rounds=rounds) + manifold_findings()

@@ -1,0 +1,291 @@
+"""Registered analysis entry points: the repo's lintable surfaces.
+
+Each pass builds the smallest real instance of a subsystem (every optimizer
+on a 4-node ring over a tiny Stiefel minimax problem, the smoke serve
+config, the mix backends) and runs the relevant rules over it.  The CLI
+(``python -m repro.analysis``) and the CI ``analysis`` job both consume
+:data:`PASSES`; ``--rules`` filters by the rule names each pass declares.
+
+Adding an entry point: write ``def pass_x(hw) -> list[Finding]``, declare
+the rules it exercises, and append a :class:`Pass` row to :data:`PASSES`.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import tempfile
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import contracts, kernel_check
+from repro.analysis.jaxpr_lint import RULES, Finding, LintTarget
+
+__all__ = ["Pass", "PASSES", "run_passes", "selftest"]
+
+_D, _R, _G, _N = 8, 2, 3, 4
+
+
+def _tiny_problem():
+    from repro.core.minimax import MinimaxProblem, project_simplex
+    rng = np.random.RandomState(0)
+    a = np.stack([rng.randn(_D, _D) for _ in range(_G)])
+    a = jnp.asarray((a + np.swapaxes(a, 1, 2)) / 2, jnp.float32)
+
+    def loss_fn(x, y, batch):
+        ag = a + batch
+        lg = -jnp.einsum("dr,gde,er->g", x["w"], ag, x["w"])
+        return jnp.dot(y, lg) - jnp.sum((y - 1.0 / _G) ** 2)
+
+    return MinimaxProblem(loss_fn=loss_fn, project_y=project_simplex,
+                          stiefel_mask={"w": True})
+
+
+def _tiny_init():
+    from repro.core import manifolds as M
+    from repro.core.gda import broadcast_to_nodes
+    x0 = broadcast_to_nodes(
+        {"w": M.random_stiefel(jax.random.PRNGKey(5), _D, _R)}, _N)
+    y0 = jnp.full((_N, _G), 1.0 / _G)
+    batch = 0.1 * jax.random.normal(jax.random.PRNGKey(6), (_N, _G, _D, _D))
+    return x0, y0, batch
+
+
+def _optimizers(telemetry=None):
+    from repro.core import OPTIMIZERS
+    from repro.core.gossip import GossipSpec
+    prob = _tiny_problem()
+    spec = GossipSpec(topology="ring", n_nodes=_N)
+    return {name: cls(prob, spec, telemetry=telemetry)
+            for name, cls in OPTIMIZERS.items()}
+
+
+def pass_optimizer_state(hw) -> list[Finding]:
+    """weak-type-leak over every optimizer's init state (PR-6 bug class)."""
+    x0, y0, batch = _tiny_init()
+    findings = []
+    for name, opt in _optimizers().items():
+        state = opt.init(x0, y0, batch)
+        target = LintTarget(name=f"{name}.init", state=state)
+        findings.extend(RULES["weak-type-leak"](target))
+    return findings
+
+
+def pass_optimizer_donation(hw) -> list[Finding]:
+    """donation-miss over every optimizer's step (donate_argnums=(0,))."""
+    x0, y0, batch = _tiny_init()
+    findings = []
+    for name, opt in _optimizers().items():
+        state = opt.init(x0, y0, batch)
+        steps = [("step", opt.step)]
+        if hasattr(opt, "anchor_step"):
+            steps.append(("anchor_step", opt.anchor_step))
+        for label, fn in steps:
+            args = (state, batch)
+            jaxpr = jax.make_jaxpr(fn)(*args)
+            target = LintTarget(name=f"{name}.{label}", jaxpr=jaxpr,
+                                args=args, donate_argnums=(0,))
+            findings.extend(RULES["donation-miss"](target))
+    return findings
+
+
+def pass_quiet_path(hw) -> list[Finding]:
+    """effect-in-quiet-path over the quiet executable of make_obs_step for
+    every optimizer, with live telemetry attached (flush cadence 50)."""
+    from repro.obs import Telemetry
+    x0, y0, batch = _tiny_init()
+    findings = []
+    with tempfile.TemporaryDirectory() as td:
+        tel = Telemetry(run="analysis", out_dir=td, flush_every=50)
+        for name, opt in _optimizers(telemetry=tel).items():
+            state = opt.init(x0, y0, batch)
+
+            def quiet(state, batch, _opt=opt):
+                with tel.flush_mode("never"):
+                    return _opt.step(state, batch)
+
+            jaxpr = jax.make_jaxpr(quiet)(state, batch)
+            target = LintTarget(name=f"{name}.quiet_step", jaxpr=jaxpr)
+            findings.extend(RULES["effect-in-quiet-path"](target))
+
+            # sanity: the flushing executable MUST carry the io effect —
+            # otherwise telemetry is silently dead and this pass is vacuous
+            def flushing(state, batch, _opt=opt):
+                with tel.flush_mode("always"):
+                    return _opt.step(state, batch)
+
+            if not jax.make_jaxpr(flushing)(state, batch).effects:
+                findings.append(Finding(
+                    "effect-in-quiet-path", f"{name}.flush_step",
+                    "flushing executable has no effects — telemetry flush "
+                    "is not wired into this optimizer"))
+    return findings
+
+
+def pass_comm_schedule(hw) -> list[Finding]:
+    """comm-schedule over the shard_map mix: fused k=3 is one megakernel
+    launch behind one ppermute pair; unfused is one launch + pair per hop;
+    the ring path never lowers a dense contraction.  Needs >= 8 devices
+    (CI sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    if len(jax.devices()) < 8:
+        return []    # single-device run: covered by the equiv-8dev CI job
+    from jax.sharding import Mesh
+    from repro.comms.backend import ShardMapBackend
+    from repro.core.gossip import GossipSpec
+    mesh = Mesh(np.asarray(jax.devices())[:8].reshape(8), ("node",))
+    # 32 nodes over 8 devices: b = 4 rows/device, so the fused halo panel
+    # and the unfused interior combine are both real (same geometry the
+    # megakernel tests assert on)
+    spec = GossipSpec(topology="ring", n_nodes=32, self_weight=1.0 / 3.0)
+    tree = jax.random.normal(jax.random.PRNGKey(0), (32, 427), jnp.float32)
+    findings = []
+    with _forced_impl("pallas_interpret"):
+        for fuse, expect_calls, expect_pp in (("on", 1, 2), ("off", 3, 6)):
+            be = ShardMapBackend(mesh, axis="node", fuse=fuse)
+            jaxpr = jax.make_jaxpr(lambda t, be=be: be.mix(spec, t, 3))(tree)
+            target = LintTarget(name=f"shard_map.mix[fuse={fuse}]",
+                                jaxpr=jaxpr)
+            findings.extend(RULES["comm-schedule"](
+                target, expect_ppermute=expect_pp,
+                expect_kernel_calls=expect_calls,
+                kernel_names=("multi_hop_mix", "ring_mix"),
+                forbid_primitives=("dot_general",)))
+    return findings
+
+
+@contextlib.contextmanager
+def _forced_impl(impl: str):
+    prev = os.environ.get("REPRO_KERNEL_IMPL")
+    os.environ["REPRO_KERNEL_IMPL"] = impl
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_IMPL", None)
+        else:
+            os.environ["REPRO_KERNEL_IMPL"] = prev
+
+
+def pass_serve_state(hw) -> list[Finding]:
+    """weak-type-leak over the serve layer's carried device state: the KV
+    pools and the ReplicaGroup's stacked parameter tree."""
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.serve.kv_cache import PagedKVSpec, init_pools
+    from repro.serve.replica import ReplicaGroup
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    findings = []
+    pools = init_pools(cfg, PagedKVSpec(), params["embed"].dtype)
+    findings.extend(RULES["weak-type-leak"](
+        LintTarget(name="serve.pools", state=pools)))
+    rg = ReplicaGroup(params, n_replicas=2)
+    findings.extend(RULES["weak-type-leak"](
+        LintTarget(name="serve.replica_group", state=rg.params)))
+    return findings
+
+
+def pass_kernels(hw) -> list[Finding]:
+    return kernel_check.run(hw)
+
+
+def pass_contracts(hw) -> list[Finding]:
+    return contracts.run()
+
+
+@dataclasses.dataclass(frozen=True)
+class Pass:
+    name: str
+    rules: tuple        # rule names this pass exercises (for --rules filter)
+    fn: Callable
+
+
+PASSES = (
+    Pass("optimizer-state", ("weak-type-leak",), pass_optimizer_state),
+    Pass("optimizer-donation", ("donation-miss",), pass_optimizer_donation),
+    Pass("quiet-path", ("effect-in-quiet-path",), pass_quiet_path),
+    Pass("comm-schedule", ("comm-schedule",), pass_comm_schedule),
+    Pass("serve-state", ("weak-type-leak",), pass_serve_state),
+    Pass("kernels", ("vmem-budget", "tiling", "oracle-coverage"),
+         pass_kernels),
+    Pass("contracts", ("doubly-stochastic", "manifold-feasibility"),
+         pass_contracts),
+)
+
+
+def run_passes(rules: set[str] | None = None, hw=None,
+               ) -> dict[str, list[Finding]]:
+    """Run every pass whose declared rules intersect ``rules`` (all when
+    None); returns {pass name: findings}."""
+    out: dict[str, list[Finding]] = {}
+    for p in PASSES:
+        if rules is not None and not rules.intersection(p.rules):
+            continue
+        out[p.name] = p.fn(hw)
+    return out
+
+
+# --------------------------------------------------------------------------
+# selftest: seeded known-bad fixtures each pass must catch
+# --------------------------------------------------------------------------
+
+def selftest() -> list[str]:
+    """Prove the analyzers fire: a weak_type init leaf, an over-VMEM block
+    config, and a sub-stochastic W_t must each produce findings.  Returns
+    a list of failures (empty == every pass caught its fixture)."""
+    failures = []
+
+    # 1. weak_type init leaf — the exact PR-6 shape (jnp.full y0)
+    bad_state = {"y": jnp.full((_N, _G), 1.0 / _G),
+                 "x": jnp.zeros((_N, _D, _R))}
+    found = RULES["weak-type-leak"](LintTarget(name="selftest", state=bad_state))
+    if not any(".y" in f.where or "'y'" in f.where for f in found):
+        failures.append("weak-type-leak missed a jnp.full weak_type leaf")
+
+    # 2. over-VMEM launch config: a 2M-lane feature block on the megakernel
+    found = kernel_check.vmem_findings(
+        "multi_hop_mix", {"block_f": 1 << 21},
+        dims={"rows": 64, "out_rows": 32})
+    if not found:
+        failures.append("vmem-budget missed a ~1.5 GiB block config")
+
+    # 3. sub-stochastic W_t: a channel whose faulty round leaks row mass
+    class _LeakyChannel:
+        def w_t(self, rnd, key):
+            from repro.core.gossip import ring_matrix
+            w = jnp.asarray(ring_matrix(_N), jnp.float32)
+            return w * 0.9    # dropped weight NOT folded into the diagonal
+
+    found = contracts.doubly_stochastic_findings(
+        _LeakyChannel(), rounds=3, where="selftest")
+    if not found:
+        failures.append("doubly-stochastic missed a 0.9-scaled W_t")
+
+    # 4. donation-miss: two state leaves donated into one output buffer
+    def collapse(state):
+        return state["a"] + state["b"]
+
+    args = ({"a": jnp.zeros((4, 4)), "b": jnp.zeros((4, 4))},)
+    jaxpr = jax.make_jaxpr(collapse)(*args)
+    found = RULES["donation-miss"](LintTarget(
+        name="selftest", jaxpr=jaxpr, args=args, donate_argnums=(0,)))
+    if not found:
+        failures.append("donation-miss missed a collapsed donation")
+
+    # 5. effect-in-quiet-path: a program with a live io_callback
+    from jax.experimental import io_callback
+
+    def noisy(x):
+        io_callback(lambda a: None, None, x)
+        return x + 1
+
+    jaxpr = jax.make_jaxpr(noisy)(jnp.zeros((2,)))
+    found = RULES["effect-in-quiet-path"](LintTarget(name="selftest",
+                                                     jaxpr=jaxpr))
+    if not found:
+        failures.append("effect-in-quiet-path missed an io_callback")
+
+    return failures

@@ -1,0 +1,382 @@
+"""Jaxpr lint engine: pluggable rules over traced step/mix/serve functions.
+
+The repo's correctness rests on invariants that live *in the jaxpr*, not in
+output values: carried optimizer state must keep stable avals across steps
+(a ``weak_type`` leaf silently retraces on step 2 — the PR-6 bug class),
+the quiet executable of ``make_obs_step`` must stay effect-free (any program
+containing an ``io_callback`` loses XLA's fast dispatch path), declared
+donations must actually alias an output buffer, and the gossip ring path
+must lower to ``ppermute`` + Pallas combine with no dense contraction.
+
+Each rule is a function ``rule(target: LintTarget, **params) -> [Finding]``
+registered in :data:`RULES`.  Tests consume the same engine through
+:func:`assert_jaxpr_rule`; the CLI (``python -m repro.analysis``) runs the
+rules over the registered entry points in ``entrypoints.py``.
+
+Adding a rule: write ``def rule_my_check(target, **params)`` returning a
+list of :class:`Finding`, add it to :data:`RULES`, and (if it should run on
+the repo's standard targets) register a target in ``entrypoints.py``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Finding", "LintTarget", "RULES", "lint", "assert_jaxpr_rule",
+    "iter_eqns", "count_primitive", "kernel_call_sites",
+    "RecompileSentinel", "RecompileError",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, printable as ``[rule] where: message``."""
+
+    rule: str
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.where}: {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LintTarget:
+    """One lintable entity.
+
+    Rules read only the fields they need: jaxpr rules read ``jaxpr`` (a
+    ``ClosedJaxpr``), the weak-type rule reads ``state`` (a pytree of carried
+    values), and the donation rule additionally reads ``args`` (the example
+    arguments the jaxpr was traced with, to map flattened invars back to
+    argnums/paths) and ``donate_argnums``.
+    """
+
+    name: str
+    jaxpr: Any = None
+    state: Any = None
+    args: Any = None
+    donate_argnums: tuple = ()
+
+
+# --------------------------------------------------------------------------
+# jaxpr walking
+# --------------------------------------------------------------------------
+
+def _jaxprs_of(val: Any) -> Iterator[Any]:
+    # Duck-typed so this survives jax.core churn: a Jaxpr has .eqns, a
+    # ClosedJaxpr wraps one as .jaxpr; call-primitive params hold either,
+    # and cond holds a tuple of branches.
+    if hasattr(val, "eqns"):
+        yield val
+    elif hasattr(val, "jaxpr") and hasattr(val.jaxpr, "eqns"):
+        yield val.jaxpr
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _jaxprs_of(v)
+
+
+def iter_eqns(jaxpr: Any) -> Iterator[Any]:
+    """Depth-first over all eqns, descending into pjit/scan/cond/shard_map
+    sub-jaxprs held in eqn params."""
+    if hasattr(jaxpr, "jaxpr"):          # accept a ClosedJaxpr too
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in _jaxprs_of(val):
+                yield from iter_eqns(sub)
+
+
+def count_primitive(closed_jaxpr: Any, name: str) -> int:
+    """Structural count of a primitive across the whole (nested) jaxpr."""
+    return sum(1 for eqn in iter_eqns(closed_jaxpr) if eqn.primitive.name == name)
+
+
+def kernel_call_sites(closed_jaxpr: Any, kernel_names: Iterable[str]) -> int:
+    """Count kernel-wrapper call sites by name in the printed jaxpr.
+
+    The jaxpr printer emits one ``name=<kernel>`` per call site (identical
+    sub-jaxpr *bodies* dedup, call sites do not), so a textual count is the
+    reliable way to count launches of a jitted Pallas wrapper — the same
+    convention the megakernel tests used before migrating onto this engine.
+    """
+    names = list(kernel_names)
+    if not names:
+        return 0
+    pat = "name=(?:" + "|".join(re.escape(n) for n in names) + ")"
+    return len(re.findall(pat, str(closed_jaxpr)))
+
+
+# --------------------------------------------------------------------------
+# rules
+# --------------------------------------------------------------------------
+
+_PROMOTED_DTYPES = ("float64", "complex128", "int64", "uint64")
+
+
+def rule_weak_type_leak(target: LintTarget, *,
+                        allowed_dtypes: Iterable[str] | None = None,
+                        ) -> list[Finding]:
+    """Carried state must be strongly typed and not silently promoted.
+
+    A ``weak_type`` leaf in an optimizer/serve state changes aval once the
+    first step computes a strong value for it, forcing a retrace on call 2
+    with no error — only a mysterious mid-training stall.  ``allowed_dtypes``
+    optionally restricts leaves to an explicit dtype whitelist.
+    """
+    findings = []
+    allowed = set(allowed_dtypes) if allowed_dtypes is not None else None
+    leaves, _ = jax.tree_util.tree_flatten_with_path(target.state)
+    for path, leaf in leaves:
+        if not hasattr(leaf, "dtype"):
+            continue
+        where = f"{target.name}{jax.tree_util.keystr(path)}"
+        dtype = jnp.dtype(leaf.dtype).name
+        if getattr(leaf, "weak_type", False):
+            findings.append(Finding(
+                "weak-type-leak", where,
+                f"leaf is weak_type {dtype}; the first strongly-typed update "
+                f"changes the carried aval and silently retraces the step "
+                f"(wrap the constructor output in a strong astype)"))
+        if dtype in _PROMOTED_DTYPES:
+            findings.append(Finding(
+                "weak-type-leak", where,
+                f"leaf dtype promoted to {dtype}; 64-bit/complex state "
+                f"doubles wire bytes and breaks the int8 gossip path"))
+        if allowed is not None and dtype not in allowed:
+            findings.append(Finding(
+                "weak-type-leak", where,
+                f"leaf dtype {dtype} not in allowed set {sorted(allowed)}"))
+    return findings
+
+
+_CALLBACK_PRIMS = frozenset(
+    {"io_callback", "pure_callback", "debug_callback", "callback"})
+
+
+def rule_effect_in_quiet_path(target: LintTarget) -> list[Finding]:
+    """The quiet executable of a dual-executable step must be effect-free.
+
+    Any XLA program *containing* an io_callback loses the fast dispatch
+    path (~60% overhead for the naive ``lax.cond`` flush, measured in PR 6),
+    so the quiet path must not merely skip the callback — it must not
+    contain one at all.
+    """
+    findings = []
+    cj = target.jaxpr
+    effects = getattr(cj, "effects", None)
+    if effects:
+        findings.append(Finding(
+            "effect-in-quiet-path", target.name,
+            "quiet executable carries effects "
+            f"{sorted(type(e).__name__ for e in effects)}; it will not use "
+            "XLA's fast dispatch path"))
+    for eqn in iter_eqns(cj):
+        if eqn.primitive.name in _CALLBACK_PRIMS:
+            findings.append(Finding(
+                "effect-in-quiet-path", target.name,
+                f"primitive `{eqn.primitive.name}` reachable from the quiet "
+                "executable"))
+    return findings
+
+
+def rule_donation_miss(target: LintTarget) -> list[Finding]:
+    """Every declared-donated input buffer must have a matching output aval.
+
+    XLA only reuses a donated buffer for an output of identical
+    (shape, dtype), and each output absorbs at most one donation — two
+    state leaves sharing one buffer (e.g. ``u`` initialized as an alias of
+    ``gx_prev``) silently drop one donation.  This is a static check on the
+    traced avals: a donated invar with no remaining matching outvar is
+    flagged.
+    """
+    cj, args = target.jaxpr, target.args
+    if cj is None or args is None:
+        raise ValueError("donation-miss needs target.jaxpr and target.args")
+    flat: list[tuple[int, str]] = []
+    for i, arg in enumerate(args):
+        arg_leaves, _ = jax.tree_util.tree_flatten_with_path(arg)
+        for path, _leaf in arg_leaves:
+            flat.append((i, jax.tree_util.keystr(path)))
+    invars = cj.jaxpr.invars
+    if len(flat) != len(invars):
+        raise ValueError(
+            f"{target.name}: example args flatten to {len(flat)} leaves but "
+            f"the jaxpr has {len(invars)} invars; trace with the same "
+            "(non-static) arguments")
+    pool: collections.Counter = collections.Counter()
+    for v in cj.jaxpr.outvars:
+        aval = getattr(v, "aval", None)
+        if hasattr(aval, "shape"):
+            pool[(tuple(aval.shape), jnp.dtype(aval.dtype).name)] += 1
+    findings = []
+    for (argnum, pathstr), var in zip(flat, invars):
+        if argnum not in target.donate_argnums:
+            continue
+        key = (tuple(var.aval.shape), jnp.dtype(var.aval.dtype).name)
+        if pool[key] > 0:
+            pool[key] -= 1
+        else:
+            findings.append(Finding(
+                "donation-miss", f"{target.name} arg{argnum}{pathstr}",
+                f"donated buffer f{key[1]}{list(key[0])} has no matching "
+                "output aval left to alias; XLA silently ignores the "
+                "donation and allocates a copy"))
+    return findings
+
+
+def rule_comm_schedule(target: LintTarget, *,
+                       expect_ppermute: int | None = None,
+                       min_ppermute: int | None = None,
+                       forbid_primitives: Iterable[str] = (),
+                       kernel_names: Iterable[str] = (),
+                       expect_kernel_calls: int | None = None,
+                       ) -> list[Finding]:
+    """The gossip schedule must lower to the expected communication pattern.
+
+    Generalizes the hand-rolled asserts from the mix tests: a fused k-hop
+    ring mix is one halo ``ppermute`` per side plus one megakernel call
+    site; the unfused path is one permute pair and one kernel call per hop;
+    and the ring path must never lower a dense ``dot_general`` (the W-matmul
+    belongs to the ``full`` topology only).
+    """
+    findings = []
+    cj = target.jaxpr
+    if expect_ppermute is not None:
+        n = count_primitive(cj, "ppermute")
+        if n != expect_ppermute:
+            findings.append(Finding(
+                "comm-schedule", target.name,
+                f"expected {expect_ppermute} ppermute(s), found {n}"))
+    if min_ppermute is not None:
+        n = count_primitive(cj, "ppermute")
+        if n < min_ppermute:
+            findings.append(Finding(
+                "comm-schedule", target.name,
+                f"expected at least {min_ppermute} ppermute(s), found {n}"))
+    for prim in forbid_primitives:
+        n = count_primitive(cj, prim)
+        if n:
+            findings.append(Finding(
+                "comm-schedule", target.name,
+                f"forbidden primitive `{prim}` appears {n} time(s) on this "
+                "path"))
+    if expect_kernel_calls is not None:
+        n = kernel_call_sites(cj, kernel_names)
+        if n != expect_kernel_calls:
+            findings.append(Finding(
+                "comm-schedule", target.name,
+                f"expected {expect_kernel_calls} kernel call site(s) for "
+                f"{sorted(kernel_names)}, found {n}"))
+    return findings
+
+
+RULES: dict[str, Callable[..., list[Finding]]] = {
+    "weak-type-leak": rule_weak_type_leak,
+    "effect-in-quiet-path": rule_effect_in_quiet_path,
+    "donation-miss": rule_donation_miss,
+    "comm-schedule": rule_comm_schedule,
+}
+
+
+def lint(target: LintTarget, rules: Iterable[Any]) -> list[Finding]:
+    """Run rule specs (``"name"`` or ``("name", {params})``) over a target."""
+    findings: list[Finding] = []
+    for spec in rules:
+        name, params = (spec, {}) if isinstance(spec, str) else spec
+        findings.extend(RULES[name](target, **params))
+    return findings
+
+
+def assert_jaxpr_rule(rule: str, *, name: str = "<target>",
+                      fn: Callable | None = None, args: tuple = (),
+                      jaxpr: Any = None, state: Any = None,
+                      donate_argnums: Iterable[int] = (),
+                      **params) -> Any:
+    """Trace ``fn`` (or take ``jaxpr``) and assert ``rule`` finds nothing.
+
+    Returns the ClosedJaxpr so callers can chain further rules without
+    retracing.  Raises ``AssertionError`` listing every finding otherwise.
+    """
+    if jaxpr is None and fn is not None:
+        jaxpr = jax.make_jaxpr(fn)(*args)
+    target = LintTarget(name=name, jaxpr=jaxpr, state=state, args=args,
+                        donate_argnums=tuple(donate_argnums))
+    findings = RULES[rule](target, **params)
+    if findings:
+        raise AssertionError(
+            "jaxpr lint failed:\n" + "\n".join(f"  {f}" for f in findings))
+    return jaxpr
+
+
+# --------------------------------------------------------------------------
+# runtime recompile sentinel
+# --------------------------------------------------------------------------
+
+class RecompileError(AssertionError):
+    """A watched jitted function retraced under fixed shapes."""
+
+
+class RecompileSentinel:
+    """Fails if a step function retraces under fixed shapes.
+
+    Two modes, composable in one sentinel:
+
+    - ``wrap(fn, label=...)`` jits ``fn`` through a trace-counting shim —
+      the counter increments at *trace* time, so a second hit under
+      unchanged shapes/dtypes is caught exactly.
+    - ``watch(label, jitted)`` snapshots an existing jitted function's
+      compile-cache size (``_cache_size``); growth beyond ``max_traces``
+      since the snapshot trips ``check()``.  This is how the serve tests
+      watch ``ServeEngine``'s page-bucketed prefill cache without touching
+      engine internals.
+    """
+
+    def __init__(self) -> None:
+        self._trace_counts: dict[str, int] = {}
+        self._watched: dict[str, Any] = {}
+        self._baseline: dict[str, int] = {}
+
+    def wrap(self, fn: Callable, label: str | None = None, **jit_kwargs):
+        label = label or getattr(fn, "__name__", "fn")
+        self._trace_counts.setdefault(label, 0)
+
+        def counted(*a, **k):
+            self._trace_counts[label] += 1
+            return fn(*a, **k)
+
+        counted.__name__ = getattr(fn, "__name__", "fn")
+        return jax.jit(counted, **jit_kwargs)
+
+    def watch(self, label: str, jitted: Any) -> Any:
+        if not hasattr(jitted, "_cache_size"):
+            raise TypeError(f"{label}: not a jitted function "
+                            f"(no _cache_size): {type(jitted).__name__}")
+        self._watched[label] = jitted
+        self._baseline[label] = jitted._cache_size()
+        return jitted
+
+    def traces(self, label: str) -> int:
+        if label in self._watched:
+            return self._watched[label]._cache_size() - self._baseline[label]
+        return self._trace_counts[label]
+
+    def labels(self) -> list[str]:
+        return sorted(set(self._trace_counts) | set(self._watched))
+
+    def check(self, max_traces: int = 1) -> None:
+        over = [f"{lbl}: {self.traces(lbl)} traces (max {max_traces})"
+                for lbl in self.labels() if self.traces(lbl) > max_traces]
+        if over:
+            raise RecompileError(
+                "recompile sentinel tripped — a step retraced under fixed "
+                "shapes: " + "; ".join(over))

@@ -22,7 +22,6 @@ Pick the hardware with ``REPRO_HW=tpu_v4|tpu_v5e|tpu_v5p`` (or pass a
 from __future__ import annotations
 
 import dataclasses
-import math
 import os
 import re
 from typing import Optional
@@ -35,6 +34,10 @@ class HardwareModel:
     peak_flops: float   # bf16 FLOP/s per chip
     hbm_bw: float       # HBM bytes/s per chip
     ici_bw: float       # interconnect bytes/s per link
+    # VMEM per core: ~16 MiB on every current TPU generation — the hard
+    # budget every pallas_call's resident blocks (inputs + outputs +
+    # scratch, double-buffered) must fit inside
+    vmem_bytes: int = 16 * 2**20
 
     @property
     def ridge_intensity(self) -> float:

@@ -15,7 +15,6 @@ report can show how stale a replica is allowed to get between syncs.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,8 +41,13 @@ class ReplicaGroup:
         self.gossip = GossipSpec(topology="ring", n_nodes=n_replicas,
                                  k_steps=k_steps, comm=comm)
         self.engine = CommEngine(self.gossip)
+        # strong-cast while stacking: jnp.stack preserves weak_type, and a
+        # weak leaf here gives the jitted sync/step functions different
+        # input avals on call one vs two — a silent mid-serve recompile
+        # (the same bug class the optimizer inits strip with _strong)
         self.params = jax.tree.map(
-            lambda x: jnp.stack([x] * n_replicas), params)
+            lambda x: jnp.stack([jnp.asarray(x)] * n_replicas)
+            .astype(jnp.asarray(x).dtype), params)
         self.state = self.engine.init_state({SLOT: self.params})
         self.counters = wire.zero_counters()
         self._key = jax.random.PRNGKey(seed + 1)

@@ -8,3 +8,11 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def assert_jaxpr_rule():
+    """The repro.analysis lint engine as a test assertion: trace a function
+    (or take a jaxpr/state) and fail with the findings if a rule fires."""
+    from repro.analysis import assert_jaxpr_rule as check
+    return check

@@ -95,19 +95,22 @@ def test_exact_mix_bit_identical(topology, n, k):
 
 
 @multi_device
-def test_ring_hop_is_permute_only_no_dense_contraction():
+def test_ring_hop_is_permute_only_no_dense_contraction(assert_jaxpr_rule):
     """The acceptance-criterion structural check: for the ring topology the
     shard_map hop is ppermute + elementwise — the dense (n, n) einsum path
-    must not appear anywhere in the jaxpr."""
+    must not appear anywhere in the jaxpr.  (Same coverage as the old
+    hand-rolled string asserts, via the repro.analysis comm-schedule rule.)"""
     spec = GossipSpec(topology="ring", n_nodes=8, k_steps=3)
     sm = ShardMapBackend(_mesh(), axis="node")
-    jaxpr = str(jax.make_jaxpr(lambda t: sm.mix(spec, t, 3))(_tree(8)))
-    assert "ppermute" in jaxpr
-    assert "dot_general" not in jaxpr and "einsum" not in jaxpr
+    assert_jaxpr_rule("comm-schedule", name="ring_hop",
+                      fn=lambda t: sm.mix(spec, t, 3), args=(_tree(8),),
+                      min_ppermute=1, forbid_primitives=("dot_general",))
     # the dense fallback, by contrast, does contract (sanity of the check)
     full = GossipSpec(topology="full", n_nodes=8, k_steps=1)
-    jaxpr_full = str(jax.make_jaxpr(lambda t: sm.mix(full, t, 1))(_tree(8)))
-    assert "dot_general" in jaxpr_full
+    with pytest.raises(AssertionError, match="dot_general"):
+        assert_jaxpr_rule("comm-schedule", name="dense_fallback",
+                          fn=lambda t: sm.mix(full, t, 1), args=(_tree(8),),
+                          forbid_primitives=("dot_general",))
 
 
 @multi_device

@@ -196,34 +196,34 @@ def test_quant_all_hop_schedule_across_backends(n, k):
 
 
 @multi_device
-def test_one_pallas_call_per_fused_mix(monkeypatch):
+def test_one_pallas_call_per_fused_mix(monkeypatch, assert_jaxpr_rule):
     """Structural acceptance check: with the kernel dispatch forced on, a
     fused k=3 mix lowers to ONE pallas_call where the unfused schedule
-    launches one per hop."""
+    launches one per hop.  (Same coverage as the old hand-rolled regex
+    asserts, via the repro.analysis comm-schedule rule — which counts
+    kernel CALL SITES by wrapper name because the jaxpr printer dedups
+    identical jitted sub-jaxprs.)"""
     monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas_interpret")
     spec = GossipSpec(topology="ring", n_nodes=32, self_weight=WC)
     x = _x(32)   # b = 4 rows/device: the unfused interior combine is real
+    kernels = ("multi_hop_mix", "ring_mix")
 
-    def jaxpr(**kw):
-        return str(jax.make_jaxpr(
-            lambda t: ShardMapBackend(_mesh(), **kw).mix(spec, t, 3))(x))
+    def mix(**kw):
+        return lambda t: ShardMapBackend(_mesh(), **kw).mix(spec, t, 3)
 
-    # the jaxpr printer dedups identical jitted sub-jaxprs, so count kernel
-    # CALL SITES by wrapper name, not raw "pallas_call" occurrences
-    import re
-
-    def kernel_calls(jx):
-        return len(re.findall(r"name=(?:multi_hop_mix|ring_mix)", jx))
-
-    fused, unfused = jaxpr(fuse="on"), jaxpr(fuse="off")
-    assert "pallas_call" in fused and "multi_hop_mix" in fused
-    assert kernel_calls(fused) == 1       # ONE megakernel launch for k=3
-    assert kernel_calls(unfused) == 3     # one combine kernel per hop
-    # wire fusion: one halo ppermute per side vs one exchange pair per hop
-    assert fused.count("ppermute") == 2
-    assert unfused.count("ppermute") == 6
+    # ONE megakernel launch for k=3, one halo ppermute per side
+    fused = assert_jaxpr_rule("comm-schedule", name="fused", fn=mix(fuse="on"),
+                              args=(x,), expect_kernel_calls=1,
+                              expect_ppermute=2, kernel_names=kernels)
+    assert "pallas_call" in str(fused) and "multi_hop_mix" in str(fused)
+    # one combine kernel + one exchange pair per hop on the unfused path
+    assert_jaxpr_rule("comm-schedule", name="unfused", fn=mix(fuse="off"),
+                      args=(x,), expect_kernel_calls=3, expect_ppermute=6,
+                      kernel_names=kernels)
     # chunked launches: ceil(3/2) = 2 megakernel calls
-    assert kernel_calls(jaxpr(fuse="on", fuse_depth=2)) == 2
+    assert_jaxpr_rule("comm-schedule", name="chunked",
+                      fn=mix(fuse="on", fuse_depth=2), args=(x,),
+                      expect_kernel_calls=2, kernel_names=kernels)
 
 
 @multi_device
