@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import manifolds as M
-from repro.core.gda import DRGDA, DRSGDA, GDAHyper, broadcast_to_nodes
+from repro.core.gda import DRGDA, GDAHyper, broadcast_to_nodes
 from repro.core.gossip import GossipSpec
 from repro.core.metric import convergence_metric
 from repro.core.minimax import MinimaxProblem, project_simplex

@@ -16,10 +16,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import OPTIMIZERS
-from repro.core.baselines import GTSRVR, HSGDHyper, SRVRHyper
+from repro.core.baselines import HSGDHyper, SRVRHyper
 from repro.core.gda import GDAHyper, broadcast_to_nodes
 from repro.core.gossip import GossipSpec
 from repro.core.metric import convergence_metric

@@ -19,7 +19,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import manifolds as M
 from repro.kernels import ops

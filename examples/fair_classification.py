@@ -5,7 +5,6 @@ Euclidean baselines the paper compares against.
 Run:  PYTHONPATH=src python examples/fair_classification.py --setting stoch
 """
 import argparse
-import json
 
 from benchmarks import fair_classification as fc
 

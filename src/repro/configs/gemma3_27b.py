@@ -4,7 +4,7 @@ context.  [hf:google/gemma-3-1b-pt family card]
 62L  d_model=5376  32H (kv=16)  d_ff=21504  vocab=262144.
 """
 from repro.configs.base import (AttnSpec, BlockSpec, MeshPlan, ModelConfig,
-                                Stage, patterned_stages)
+                                patterned_stages)
 
 _LOCAL = BlockSpec(kind="attn", attn=AttnSpec(kind="gqa", sliding_window=1024))
 _GLOBAL = BlockSpec(kind="attn", attn=AttnSpec(kind="gqa"))

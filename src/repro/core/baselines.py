@@ -23,7 +23,7 @@ DRGDA/DRSGDA and what the paper's figures show costs them convergence speed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,7 @@ from repro.comms import layer as comms_layer
 from repro.core.gda import (GDAHyper, StepMetrics, _consensus, _copy_tree,
                             _strong,
                             _tree_consensus, _tree_mean_norm,
-                            _vmapped_loss_and_rgrads, make_obs_step)
+                            make_obs_step)
 from repro.core.gossip import GossipSpec
 from repro.core.minimax import MinimaxProblem
 from repro.obs import wire as obs_wire

@@ -17,7 +17,6 @@ Launch configs (block shapes, NS iteration counts) resolve through
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax

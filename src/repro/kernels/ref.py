@@ -9,7 +9,6 @@ cost_analysis FLOPs match the kernel's.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ import json
 import math
 import os
 import time
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

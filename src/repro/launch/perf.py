@@ -19,7 +19,6 @@ import os
 import sys
 import time
 
-import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.base import INPUT_SHAPES, MeshPlan, MoESpec  # noqa: F401

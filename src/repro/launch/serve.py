@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.steps import make_serve_step
 from repro.models import transformer as T
 
 

@@ -8,7 +8,6 @@ shapes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

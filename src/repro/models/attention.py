@@ -10,7 +10,6 @@ allocate ``cache_len == window`` even when the sequence is 500k tokens.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ kernels stay Euclidean.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ for the convergence metric M_t.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -28,13 +28,11 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import json
 import os
 import time
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import io_callback
 
 from repro.obs import events as obs_events

@@ -19,7 +19,6 @@ scan machinery unchanged; :class:`PagePool` is the host-side allocator
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Data pipeline determinism/heterogeneity + checkpoint roundtrip."""
-import os
 
 import jax
 import jax.numpy as jnp

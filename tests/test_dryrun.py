@@ -11,8 +11,6 @@ import os
 import subprocess
 import sys
 
-import jax
-import numpy as np
 import pytest
 
 from repro.launch import roofline

@@ -3,7 +3,6 @@ token-by-token decode for every block family; MoE dispatch vs dense oracle."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import (AttnSpec, BlockSpec, FrontendSpec, ModelConfig,
                                 MoESpec, SSMSpec, XLSTMSpec, patterned_stages,

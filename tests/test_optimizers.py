@@ -5,7 +5,6 @@ Toy task (robust PCA-flavoured, matches the paper's problem class):
       sum_g y_g * ( -tr(x^T A_g x) ) - rho ||y - 1/G||^2
 with per-node perturbations of A_g (data heterogeneity).
 """
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import OPTIMIZERS, manifolds as M
-from repro.core.baselines import DMHSGD, GTGDA, GTSRVR, HSGDHyper, SRVRHyper
+from repro.core.baselines import GTSRVR, SRVRHyper
 from repro.core.gda import DRGDA, DRSGDA, GDAHyper, broadcast_to_nodes
 from repro.core.gossip import GossipSpec
 from repro.core.metric import convergence_metric
