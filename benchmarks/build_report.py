@@ -235,6 +235,39 @@ def autotune_section(tune: dict | None) -> str:
     return "\n".join(out)
 
 
+def churn_section(elastic: dict | None) -> str:
+    """§Elastic gossip from experiments/bench/elastic.json: M_t / consensus
+    per churn schedule on both paper problems, plus the live-node trace
+    from the membership telemetry riding each eval row.  Empty string when
+    the elastic bench hasn't run."""
+    if not elastic or "fair_classification" not in elastic:
+        return ""
+    out = ["## §Elastic gossip\n"]
+    out.append(
+        "`benchmarks/run.py elastic` — DRGDA on an 8-node ring under\n"
+        "membership churn and stale-hop tolerance (`repro.comms.elastic`).\n"
+        "Departed nodes stop sending and receiving (their W_t rows fold to\n"
+        "the identity, keeping every realized round doubly stochastic over\n"
+        "the live subgraph); rejoining nodes re-enter from their neighbours'\n"
+        "projected consensus mean.  All churn draws are seeded.\n")
+    out.append("| problem | schedule | final M_t | final consensus | "
+               "live trace | finite |")
+    out.append("|---|---|---|---|---|---|")
+    for r in elastic["fair_classification"] + elastic["robust_pca"]:
+        live = "/".join(str(row.get("live", "-")) for row in r["curve"])
+        out.append(
+            f"| {r['problem']} | {r['schedule']} | {r['final_M_t']:.4f} "
+            f"| {r['final_consensus']:.2e} | {live} | {r['finite']} |")
+    out.append(
+        f"\n* scripted leave-then-rejoin vs static ring (fair "
+        f"classification): M_t ratio "
+        f"**{elastic['leave_rejoin_Mt_ratio']:.2f}** — within 2x: "
+        f"**{elastic['leave_rejoin_within_2x']}**")
+    out.append(f"* every schedule finite on both problems: "
+               f"**{elastic['all_finite']}**\n")
+    return "\n".join(out)
+
+
 def analysis_section(analysis: dict | None) -> str:
     """§Static analysis from experiments/bench/analysis.json (written by
     ``python -m repro.analysis``): pass/finding counts per analysis pass.
@@ -272,10 +305,11 @@ def load_obs() -> dict | None:
     return _load_bench("obs")
 
 
-def build(recs, obs=None, tune=None, serve=None, analysis=None) -> str:
+def build(recs, obs=None, tune=None, serve=None, analysis=None,
+          elastic=None) -> str:
     text = dryrun_section(recs) + "\n" + roofline_section(recs)
     for section in (telemetry_section(obs, serve), autotune_section(tune),
-                    analysis_section(analysis)):
+                    churn_section(elastic), analysis_section(analysis)):
         if section:
             text += "\n" + section
     return text
@@ -288,7 +322,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     recs = load_records()
     text = build(recs, obs=load_obs(), tune=_load_bench("tune"),
-                 serve=_load_bench("serve"), analysis=_load_bench("analysis"))
+                 serve=_load_bench("serve"), analysis=_load_bench("analysis"),
+                 elastic=_load_bench("elastic"))
     if args.write:
         path = os.path.join(ROOT, "EXPERIMENTS.md")
         marker_a = "<!-- AUTOGEN:DRYRUN-ROOFLINE:BEGIN -->"

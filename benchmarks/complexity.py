@@ -41,7 +41,7 @@ def _problem(seed=0):
         return project_simplex(1.0 / G + lg / (2 * RHO))
 
     return MinimaxProblem(loss_fn=loss_fn, project_y=project_simplex,
-                          stiefel_mask={"w": True}, y_star=y_star)
+                          manifold_map={"w": "stiefel"}, y_star=y_star)
 
 
 def run(steps: int = 400) -> dict:

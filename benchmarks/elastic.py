@@ -1,0 +1,138 @@
+"""Elastic-gossip benchmark: convergence under membership churn.
+
+Sweeps churn schedule x stale-hop tolerance tau on the two paper problems
+that exercise both manifolds:
+
+* fair classification (Stiefel CNN head, Eq. 19/20) with DRGDA — including
+  the acceptance scenario: a scripted leave-then-rejoin run must stay
+  finite and land within 2x of the static-ring M_t;
+* robust PCA (Grassmann subspace, Eq. 21-style adversary) with DRGDA.
+
+Each run records the M_t / consensus curve plus membership telemetry
+(live-node count per eval), so the report can plot convergence against the
+realized churn.  All churn draws are seeded — rerunning the benchmark
+reproduces the same leave/join sequence bit-for-bit.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.elastic import ChurnSchedule, ElasticSpec
+from repro.core import DRGDA
+from repro.core.gda import GDAHyper, broadcast_to_nodes
+from repro.core.gossip import GossipSpec
+from repro.core.metric import convergence_metric
+from repro.data.synthetic import ClassificationStream
+from repro.geometry import GRASSMANN
+from repro.objectives import fair
+from repro.objectives import robust_pca as rp
+
+N = 8  # ring size for every elastic run (churn on n=20 tells the same story)
+
+SCHEDULES: dict[str, ElasticSpec | None] = {
+    # baseline: no elastic engine at all — the exact main-path program
+    "static": None,
+    # the acceptance scenario: one node leaves, later rejoins
+    "leave_rejoin": ElasticSpec(churn=ChurnSchedule(
+        kind="scripted", events=((10, "leave", 3), (30, "join", 3)))),
+    # sustained seeded churn at two rates, with and without tolerance
+    "random_5pct": ElasticSpec(churn=ChurnSchedule(
+        kind="random", leave_rate=0.05, join_rate=0.5)),
+    "random_20pct": ElasticSpec(churn=ChurnSchedule(
+        kind="random", leave_rate=0.20, join_rate=0.5)),
+    "straggle_tau0": ElasticSpec(tau=0, straggler_rate=0.3),
+    "straggle_tau2": ElasticSpec(tau=2, straggler_rate=0.3),
+}
+
+
+def _membership_row(state) -> dict:
+    mem = getattr(state.comm, "elastic", None)
+    if mem is None:
+        return {"live": N}
+    act = np.asarray(mem.active)
+    return {"live": int(act.sum()), "active": act.astype(int).tolist()}
+
+
+def _drive(opt, problem, state, batch_fn, eval_batch, steps, eval_every):
+    step_fn = opt.make_step(donate=False)
+    curve = []
+    t0 = time.time()
+    for t in range(steps):
+        state, metrics = step_fn(state, batch_fn(t))
+        if (t + 1) % eval_every == 0 or t == 0:
+            m = convergence_metric(problem, state.x, state.y, eval_batch)
+            curve.append({"step": t + 1, "loss": float(metrics.loss),
+                          "M_t": float(m["M_t"]),
+                          "consensus_x": float(m["consensus_x"]),
+                          **_membership_row(state)})
+    wall = time.time() - t0
+    return {"curve": curve, "final_M_t": curve[-1]["M_t"],
+            "final_consensus": curve[-1]["consensus_x"],
+            "finite": all(np.isfinite(r["M_t"]) for r in curve),
+            "us_per_step": wall / steps * 1e6}
+
+
+def run_fair(name: str, elastic: ElasticSpec | None, steps: int = 60,
+             seed: int = 0) -> dict:
+    stream = ClassificationStream(n_nodes=N, batch_per_node=32, seed=seed)
+    params = fair.init_cnn(jax.random.PRNGKey(seed),
+                           image_hw=stream.image_hw)
+    problem = fair.make_fair_problem(params, rho=1.0)
+    x0 = broadcast_to_nodes(params, N)
+    y0 = jnp.full((N, 3), 1.0 / 3.0)
+    gossip = GossipSpec(topology="ring", n_nodes=N, k_steps=1,
+                        elastic=elastic)
+    opt = DRGDA(problem, gossip, GDAHyper(alpha=0.5, beta=0.05, eta=0.2))
+    full = {k: jnp.asarray(v) for k, v in stream.full(n_batches=4).items()}
+    state = opt.init(x0, y0, full)
+    res = _drive(opt, problem, state, lambda t: full, full, steps,
+                 eval_every=10)
+    return {"problem": "fair_classification", "schedule": name, **res}
+
+
+def run_pca(name: str, elastic: ElasticSpec | None, steps: int = 200,
+            seed: int = 1) -> dict:
+    problem = rp.make_robust_pca_problem(rho=0.5)
+    batches, _ = rp.make_batches(jax.random.PRNGKey(seed), n_nodes=N,
+                                 m=24, d=20, r=3, outlier_frac=0.1,
+                                 outlier_scale=1.5)
+    x0 = broadcast_to_nodes(
+        {"w": GRASSMANN.rand(jax.random.PRNGKey(0), 20, 3)}, N)
+    y0 = rp.init_y(N, 24)
+    gossip = GossipSpec(topology="ring", n_nodes=N, k_steps=1,
+                        elastic=elastic)
+    opt = DRGDA(problem, gossip, GDAHyper(alpha=0.5, beta=0.1, eta=0.3))
+    state = opt.init(x0, y0, batches)
+    res = _drive(opt, problem, state, lambda t: batches, batches, steps,
+                 eval_every=25)
+    return {"problem": "robust_pca", "schedule": name, **res}
+
+
+def run(steps_fair: int = 60, steps_pca: int = 200) -> dict:
+    t0 = time.time()
+    fair_rows = [run_fair(n, e, steps=steps_fair)
+                 for n, e in SCHEDULES.items()]
+    pca_rows = [run_pca(n, e, steps=steps_pca)
+                for n, e in SCHEDULES.items()]
+
+    by = {r["schedule"]: r for r in fair_rows}
+    static, churn = by["static"], by["leave_rejoin"]
+    ratio = churn["final_M_t"] / max(static["final_M_t"], 1e-12)
+    return {
+        "fair_classification": fair_rows,
+        "robust_pca": pca_rows,
+        "leave_rejoin_Mt_ratio": ratio,
+        # acceptance: finite and within 2x of the static ring
+        "leave_rejoin_within_2x": bool(churn["finite"] and ratio <= 2.0),
+        "all_finite": all(r["finite"] for r in fair_rows + pca_rows),
+        "us_total": (time.time() - t0) * 1e6,
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

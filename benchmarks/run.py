@@ -25,6 +25,10 @@ so regressions are visible across revisions without diffing payloads.
   serve       — decode service: tokens/sec + p99 latency vs batch size,
                 continuous vs static batching, paged-kernel accuracy,
                 2-replica gossip drift (writes experiments/bench/serve.json)
+  elastic     — elastic-gossip churn sweep: M_t / consensus vs churn rate
+                and stale-hop tolerance tau on fair classification and
+                robust PCA; checks the scripted leave-then-rejoin run stays
+                within 2x of the static ring
 """
 from __future__ import annotations
 
@@ -264,6 +268,19 @@ def bench_obs():
     return res["us_per_step_on"], derived
 
 
+def bench_elastic():
+    from benchmarks import elastic
+    res = elastic.run()
+    _save("elastic", res)
+    rows = res["fair_classification"] + res["robust_pca"]
+    fair = {r["schedule"]: r["final_M_t"] for r in res["fair_classification"]}
+    derived = (f"leave_rejoin_ratio={res['leave_rejoin_Mt_ratio']:.2f};"
+               f"within_2x={res['leave_rejoin_within_2x']};"
+               f"all_finite={res['all_finite']};"
+               + ";".join(f"{k}_Mt={v:.4f}" for k, v in fair.items()))
+    return res["us_total"] / max(len(rows), 1), derived
+
+
 def bench_serve():
     from benchmarks import serve
     res = serve.run()
@@ -289,6 +306,7 @@ ALL = {
     "roofline": bench_roofline,
     "obs": bench_obs,
     "serve": bench_serve,
+    "elastic": bench_elastic,
 }
 
 

@@ -32,7 +32,7 @@ def y_star(x, batches):                       # closed-form inner maximizer
 
 
 problem = MinimaxProblem(loss_fn=loss_fn, project_y=project_simplex,
-                         stiefel_mask={"w": True}, y_star=y_star)
+                         manifold_map={"w": "stiefel"}, y_star=y_star)
 opt = DRGDA(problem, GossipSpec(topology="ring", n_nodes=N),
             GDAHyper(alpha=0.5, beta=0.03, eta=0.1))
 

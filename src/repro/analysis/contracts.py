@@ -24,7 +24,7 @@ import numpy as np
 from repro.analysis.jaxpr_lint import Finding
 
 __all__ = ["matrix_findings", "doubly_stochastic_findings",
-           "manifold_findings", "run"]
+           "elastic_sweep_findings", "manifold_findings", "run"]
 
 
 def matrix_findings(w: Any, *, where: str = "W", tol: float = 1e-5,
@@ -103,6 +103,67 @@ def channel_sweep_findings(*, n: int = 8, rounds: int = 20, seed: int = 0,
     return findings
 
 
+def elastic_sweep_findings(*, n: int = 8, rounds: int = 100, seed: int = 0,
+                           tol: float = 1e-5,
+                           max_report: int = 5) -> list[Finding]:
+    """Elastic execution mode: every *realized* W_t — under scripted
+    leave/rejoin, seeded-random churn, stragglers, stale-hop tolerance —
+    must stay symmetric doubly stochastic, and every departed node's row
+    must be exactly the identity row (it neither sends nor receives).
+
+    Unlike :func:`doubly_stochastic_findings` this threads the real
+    ``Membership`` state through ``ElasticEngine.mix`` round by round, so
+    the matrices checked are the ones a training run would apply.
+    """
+    from repro.comms.elastic import ChurnSchedule, ElasticEngine, ElasticSpec
+    from repro.core.gossip import GossipSpec
+    schedules = {
+        "static": ChurnSchedule(),
+        "scripted": ChurnSchedule(kind="scripted", events=(
+            (3, "leave", 1), (7, "leave", 4), (12, "join", 1),
+            (20, "join", 4))),
+        "random": ChurnSchedule(kind="random", leave_rate=0.2,
+                                join_rate=0.5),
+    }
+    findings = []
+    for sched_name, churn in schedules.items():
+        for tau, drop, strag in ((0, 0.0, 0.3), (2, 0.2, 0.3)):
+            spec = ElasticSpec(churn=churn, tau=tau, drop_rate=drop,
+                               straggler_rate=strag, seed=seed)
+            gossip = GossipSpec(topology="ring", n_nodes=n, k_steps=1,
+                                elastic=spec)
+            engine = ElasticEngine(gossip)
+            x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 4))
+            state = engine.init_state({"x": x})
+            view_fn = jax.jit(lambda st, r: (
+                engine.round_view(st, "x", r).wt,
+                engine.round_view(st, "x", r).active))
+            step_fn = jax.jit(
+                lambda st, t, r: engine.mix(st, "x", t, steps=1, rnd=r)[1])
+            where = (f"elastic/{sched_name}/tau={tau}/drop={drop}/"
+                     f"strag={strag}")
+            for rnd in range(rounds):
+                wt, active = view_fn(state, rnd)
+                wt, active = np.asarray(wt), np.asarray(active)
+                findings.extend(matrix_findings(
+                    wt, where=f"{where} round {rnd}", tol=tol))
+                dead = np.where(active == 0)[0]
+                eye = np.eye(n, dtype=wt.dtype)
+                for i in dead:
+                    if np.abs(wt[i] - eye[i]).max() > tol:
+                        findings.append(Finding(
+                            "doubly-stochastic", f"{where} round {rnd}",
+                            f"departed node {i}'s row is not the identity "
+                            "row: it would still send/receive"))
+                if len(findings) >= max_report:
+                    findings.append(Finding(
+                        "doubly-stochastic", where,
+                        f"stopping after {max_report} findings"))
+                    return findings
+                state = step_fn(state, x, rnd)
+    return findings
+
+
 def manifold_findings(*, seed: int = 0, d: int = 12, r: int = 4,
                       step: float = 0.1, tol: float = 1e-4,
                       names: Iterable[str] | None = None) -> list[Finding]:
@@ -140,4 +201,6 @@ def manifold_findings(*, seed: int = 0, d: int = 12, r: int = 4,
 
 def run(*, rounds: int = 20) -> list[Finding]:
     """All numerical contract validators."""
-    return channel_sweep_findings(rounds=rounds) + manifold_findings()
+    return (channel_sweep_findings(rounds=rounds)
+            + elastic_sweep_findings()
+            + manifold_findings())

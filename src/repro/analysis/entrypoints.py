@@ -41,7 +41,7 @@ def _tiny_problem():
         return jnp.dot(y, lg) - jnp.sum((y - 1.0 / _G) ** 2)
 
     return MinimaxProblem(loss_fn=loss_fn, project_y=project_simplex,
-                          stiefel_mask={"w": True})
+                          manifold_map={"w": "stiefel"})
 
 
 def _tiny_init():

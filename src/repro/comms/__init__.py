@@ -4,10 +4,15 @@ Everything between the optimizer and the wire — see :mod:`repro.comms.layer`
 for the CHOCO-style engine, :mod:`repro.comms.compress` for the operators,
 and :mod:`repro.comms.channel` for the fault/topology-schedule model.
 """
+from repro.comms.api import (BACKENDS, CommLike, ElasticLike,  # noqa: F401
+                             MixBackendProtocol, backend_names,
+                             register_backend)
 from repro.comms.backend import (MixBackend, ShardMapBackend,  # noqa: F401
                                  StackedBackend, make_backend,
                                  resolve_backend)
 from repro.comms.channel import ChannelModel  # noqa: F401
+from repro.comms.elastic import (ChurnSchedule, ElasticEngine,  # noqa: F401
+                                 ElasticSpec, Membership)
 from repro.comms.compress import (Compressor, IdentityCompressor,  # noqa: F401
                                   Int8Stochastic, LowRank, TopK,
                                   make_compressor, tree_bits,

@@ -45,6 +45,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.comms import api
+
 Array = jax.Array
 PyTree = Any
 
@@ -79,6 +81,15 @@ class MixBackend(Protocol):
                     steps: int) -> PyTree:
         """``steps`` hops through a :class:`repro.comms.channel.ChannelModel`
         (link drops / stragglers / schedules)."""
+        ...
+
+    def mix_wt(self, spec, tree: PyTree, wt: Array, *,
+               steps: int = 1) -> PyTree:
+        """``steps`` hops of one explicit effective mixing matrix ``wt``
+        (n, n) — the elastic engine's realized W_t, shared across the hops
+        of a round.  Per-row math must match ``mix_channel``'s faulty-round
+        expression so an elastic round degenerates bit-for-bit to the
+        channel path when the realized matrices coincide."""
         ...
 
     def quant_ring_hop(self, spec, q: Array, scale: Array, *,
@@ -138,6 +149,17 @@ class StackedBackend:
     def mix_channel(self, spec, channel, tree: PyTree, rnd, key: Array,
                     steps: int) -> PyTree:
         return channel.mix(tree, rnd, key, steps=steps)
+
+    def mix_wt(self, spec, tree: PyTree, wt: Array, *,
+               steps: int = 1) -> PyTree:
+        # the identical einsum expression ChannelModel.mix_hop applies to a
+        # faulty round, so elastic W_t application is bit-equal to the
+        # channel path whenever the matrices are bit-equal
+        for _ in range(max(steps, 0)):
+            tree = jax.tree.map(
+                lambda x: jnp.einsum("ij,j...->i...", wt.astype(x.dtype), x),
+                tree)
+        return tree
 
     def quant_ring_hop(self, spec, q: Array, scale: Array, *,
                        out_dtype=jnp.float32) -> Array:
@@ -470,6 +492,39 @@ class ShardMapBackend:
                 (x_specs, P()), out_specs=x_specs)(tree, wt)
         return tree
 
+    def mix_wt(self, spec, tree: PyTree, wt: Array, *,
+               steps: int = 1) -> PyTree:
+        """Explicit-W_t hops.  A realized elastic matrix over a ring stays
+        ring-banded (it is the base ring matrix with links masked and the
+        mass folded into the diagonal), so it is consumed as its three
+        diagonals on the same per-link ``ring_link_weights`` path the
+        channel model uses — never a dense (n, n) einsum against model
+        data.  The fused ``multi_hop_mix`` megakernel path is untouched:
+        clean static-membership mixes keep routing through it."""
+        if steps <= 0 or spec.n_nodes == 1:
+            return tree
+        if self._use_stacked(spec):
+            return self._stacked.mix_wt(spec, tree, wt, steps=steps)
+        b = self._block(spec)
+        x_specs = jax.tree.map(lambda _: self._pspec, tree)
+        if spec.topology == "ring":
+            n = spec.n_nodes
+            i = jnp.arange(n)
+            wd, wl, wr = wt[i, i], wt[i, (i - 1) % n], wt[i, (i + 1) % n]
+            hop = self._shmap(
+                functools.partial(self._channel_ring_hop_blocks, b=b),
+                (x_specs, self._pspec, self._pspec, self._pspec),
+                out_specs=x_specs)
+            for _ in range(steps):
+                tree = hop(tree, wd, wl, wr)
+            return tree
+        hop = self._shmap(
+            lambda t, w: jax.tree.map(lambda x: self._dense_block(x, w, b), t),
+            (x_specs, P()), out_specs=x_specs)
+        for _ in range(steps):
+            tree = hop(tree, wt)
+        return tree
+
     def quant_ring_hop(self, spec, q: Array, scale: Array, *,
                        out_dtype=jnp.float32) -> Array:
         if self._use_stacked(spec):
@@ -602,15 +657,23 @@ def _quant_tree_bytes(tree: PyTree) -> float:
 
 
 def resolve_backend(spec) -> MixBackend:
-    """The backend a ``GossipSpec`` routes through (stacked when unset)."""
+    """The backend a ``GossipSpec`` routes through (stacked when unset).
+
+    ``spec.backend`` may be a backend instance or a registry name
+    (``"stacked" | "shard_map"``, see :data:`repro.comms.api.BACKENDS`)."""
     be = getattr(spec, "backend", None)
-    return be if be is not None else _DEFAULT_STACKED
+    if be is None:
+        return _DEFAULT_STACKED
+    if isinstance(be, str):
+        return make_backend(be)
+    return be
 
 
 def make_backend(kind: str = "auto", *, mesh: Optional[Mesh] = None,
                  axis: str | Sequence[str] = "node", fuse: str = "auto",
                  fuse_depth: Optional[int] = None) -> MixBackend:
-    """Config-knob constructor.
+    """Config-knob constructor, dispatching through the
+    :data:`repro.comms.api.BACKENDS` string registry.
 
     ``stacked`` — always the stacked backend.
     ``shard_map`` — requires a mesh with the node axis.
@@ -619,22 +682,37 @@ def make_backend(kind: str = "auto", *, mesh: Optional[Mesh] = None,
     ``fuse``/``fuse_depth`` configure the shard_map multi-hop megakernel
     (``auto``/``on`` = fused halo panels, ``off`` = hop-by-hop ppermute).
     """
-    if kind == "stacked":
-        return _DEFAULT_STACKED
-    if kind == "shard_map":
-        if mesh is None:
-            raise ValueError("mix_backend='shard_map' requires a mesh")
-        return ShardMapBackend(mesh, axis=axis, fuse=fuse,
-                               fuse_depth=fuse_depth)
     if kind == "auto":
         if mesh is not None:
             axes = (axis,) if isinstance(axis, str) else tuple(axis)
             if all(a in mesh.shape for a in axes) and \
                     int(np.prod([mesh.shape[a] for a in axes])) > 1:
-                return ShardMapBackend(mesh, axis=axis, fuse=fuse,
-                                       fuse_depth=fuse_depth)
-        return _DEFAULT_STACKED
-    raise ValueError(f"unknown mix backend {kind!r}")
+                kind = "shard_map"
+            else:
+                kind = "stacked"
+        else:
+            kind = "stacked"
+    factory = api.BACKENDS.get(kind)
+    if factory is None:
+        raise ValueError(
+            f"unknown mix backend {kind!r}; registered: {api.backend_names()}")
+    return factory(mesh=mesh, axis=axis, fuse=fuse, fuse_depth=fuse_depth)
 
 
 _DEFAULT_STACKED = StackedBackend()
+
+
+def _make_stacked(*, mesh=None, axis="node", fuse="auto",
+                  fuse_depth=None) -> MixBackend:
+    return _DEFAULT_STACKED
+
+
+def _make_shard_map(*, mesh=None, axis="node", fuse="auto",
+                    fuse_depth=None) -> MixBackend:
+    if mesh is None:
+        raise ValueError("mix_backend='shard_map' requires a mesh")
+    return ShardMapBackend(mesh, axis=axis, fuse=fuse, fuse_depth=fuse_depth)
+
+
+api.register_backend("stacked", _make_stacked)
+api.register_backend("shard_map", _make_shard_map)

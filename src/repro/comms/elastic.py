@@ -1,0 +1,422 @@
+"""Elastic asynchronous gossip: churn and staleness as an execution mode.
+
+:class:`repro.comms.channel.ChannelModel` *simulates* link faults — every
+node still computes, and a dropped link is a counterfactual on an otherwise
+static membership.  This module promotes that machinery to a supported
+execution mode in which departures and stragglers are *real*:
+
+* a :class:`ChurnSchedule` (scripted timeline or seeded Markov draw) decides
+  which nodes are **members** each round;
+* sends to non-members are skipped and each dead link's weight folds back
+  into the two endpoint diagonals, so every realized ``W_t`` stays symmetric
+  doubly stochastic over the **live subgraph** (a departed node's row is
+  exactly the identity row — it neither sends nor receives);
+* a member that fails to publish a round (straggler) stays mixable for up to
+  ``tau`` rounds through its **last-received buffer** — bounded-delay
+  stale-hop tolerance; past ``tau`` the link is treated as dropped.  At
+  ``tau = 0`` this degenerates bit-for-bit to the channel model's drop
+  semantics (same key-split order, same mask algebra, same fold formula,
+  same backend expressions);
+* a (re)joining node is re-initialized from its live neighbours'
+  ``geometry.consensus_mean`` (x/y slots, projected through the manifold
+  map the optimizer registers) and from zeros (dual/tracking slots and the
+  CHOCO hat memory), then participates normally.
+
+All of it is carried as one traced optimizer-state leaf:
+:class:`Membership` rides in ``CommState.elastic`` exactly like the CHOCO
+hats, so the jitted step stays a pure function and a fixed seed replays the
+same churn realization bit-for-bit.
+
+In **compressed** mode no separate stale buffers exist: the CHOCO hats *are*
+the last-received public copies, so staleness tolerance falls out of gating
+the hat fold by the publish mask — a non-publishing member's hat simply
+stays put and keeps being mixed until it ages out.
+
+Elastic mode replaces the simulation-mode channel: configure fault rates on
+:class:`ElasticSpec`, not on ``CommSpec`` (mixing both raises).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.backend import MixBackend
+from repro.comms.layer import CommEngine, CommState
+from repro.comms.spec import CommSpec
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# churn schedules
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _scripted_timeline(events: tuple, n: int) -> np.ndarray:
+    """Cumulative active-mask timeline (horizon+1, n) from (round, action,
+    node) events; row t is the membership in force during round t, rows past
+    the last event repeat it (the engine clamps the index)."""
+    horizon = max(r for r, _, _ in events)
+    tl = np.ones((horizon + 1, n), np.float32)
+    cur = np.ones(n, np.float32)
+    for t in range(horizon + 1):
+        for r, action, node in events:
+            if r == t:
+                cur[node] = 0.0 if action == "leave" else 1.0
+        tl[t] = cur
+    return tl
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSchedule:
+    """Who is a member each round.
+
+    ``static``   — everyone, always (elastic machinery stays off unless the
+    spec also carries fault rates).
+    ``scripted`` — an explicit event timeline ``((round, "leave"|"join",
+    node), ...)``; membership is cumulative and repeats past the last event.
+    ``random``   — seeded per-round Markov draw: a member leaves with
+    ``leave_rate``, a non-member rejoins with ``join_rate``; node 0 is
+    pinned live so the subgraph never empties.
+    """
+
+    kind: str = "static"            # static | scripted | random
+    events: tuple = ()              # ((round, "leave"|"join", node), ...)
+    leave_rate: float = 0.0
+    join_rate: float = 0.5
+
+    def __post_init__(self):
+        if self.kind not in ("static", "scripted", "random"):
+            raise ValueError(f"unknown churn kind {self.kind!r}")
+        object.__setattr__(self, "events", tuple(tuple(e)
+                                                 for e in self.events))
+
+    @property
+    def enabled(self) -> bool:
+        if self.kind == "scripted":
+            return len(self.events) > 0
+        return self.kind == "random"
+
+    def active(self, prev: Array, rnd: Array | int, key: Array) -> Array:
+        """Membership mask f32[n] in force during round ``rnd``, given the
+        previous round's mask (jit-safe; ``rnd`` may be traced)."""
+        n = prev.shape[0]
+        if self.kind == "scripted" and self.events:
+            tl = jnp.asarray(_scripted_timeline(self.events, n))
+            idx = jnp.clip(jnp.asarray(rnd, jnp.int32), 0, tl.shape[0] - 1)
+            return jnp.take(tl, idx, axis=0)
+        if self.kind == "random":
+            k_leave, k_join = jax.random.split(key)
+            stay = jax.random.bernoulli(
+                k_leave, 1.0 - self.leave_rate, (n,)).astype(jnp.float32)
+            come = jax.random.bernoulli(
+                k_join, self.join_rate, (n,)).astype(jnp.float32)
+            act = jnp.where(prev > 0, stay, come)
+            return act.at[0].set(1.0)
+        return prev
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticSpec:
+    """Execution-mode config hung on ``GossipSpec.elastic``.
+
+    ``tau`` is the stale-hop tolerance: a member that missed publishing for
+    at most ``tau`` consecutive rounds keeps its links alive through its
+    last-received buffer; ``tau = 0`` reproduces the channel model's hard
+    drop semantics bit-for-bit.  ``drop_rate`` / ``straggler_rate`` are the
+    execution-mode twins of the ``CommSpec`` simulation knobs (configure
+    them here, not there, when elastic mode is on).
+    """
+
+    churn: ChurnSchedule = ChurnSchedule()
+    tau: int = 0
+    drop_rate: float = 0.0
+    straggler_rate: float = 0.0
+    seed: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return (self.churn.enabled or self.drop_rate > 0.0
+                or self.straggler_rate > 0.0)
+
+
+class Membership(NamedTuple):
+    """Traced elastic state, one leaf in ``CommState.elastic``.
+
+    ``round`` is the last round whose churn transition was committed — the
+    first slot mixed in a round advances membership, later slots of the same
+    round see the committed masks (idempotency guard: one optimizer step
+    mixes several slots against one shared ``CommState``).
+    """
+
+    round: Array                    # i32 scalar, -1 before the first round
+    active: Array                   # f32[n] current membership mask
+    prev_active: Array              # f32[n] previous round's mask
+    staleness: dict[str, Array]     # slot -> i32[n] rounds since last publish
+    stale: dict[str, PyTree]        # slot -> last-published copy
+    #                                 (uncompressed tau>0 only; compressed
+    #                                 mode reuses the CHOCO hats)
+
+
+class RoundView(NamedTuple):
+    """Everything one (slot, round) realizes, derived in a single place so
+    the mix, the wire counters, and the contracts validator agree by
+    construction."""
+
+    active: Array                   # f32[n] committed membership
+    prev: Array                     # f32[n] previous round's membership
+    joined: Array                   # f32[n] 1 where a node joined this round
+    publish: Array                  # f32[n] members that sent this round
+    fresh: Array                    # f32[n] mixable endpoints (<= tau stale)
+    link_mask: Array                # f32[n,n] symmetric realized link mask
+    wt: Array                       # f32[n,n] realized mixing matrix
+    staleness: Array                # i32[n] updated per-slot counters
+    committed_round: Array          # i32 scalar membership round watermark
+    sched_live: Array               # scheduled undirected links, live pairs
+    act_links: Array                # realized undirected links
+
+
+def _bcast(v: Array, leaf: Array) -> Array:
+    """Broadcast a per-node vector over a stacked (n, ...) leaf."""
+    return v.astype(leaf.dtype).reshape(v.shape + (1,) * (leaf.ndim - 1))
+
+
+class ElasticEngine(CommEngine):
+    """``CommEngine`` whose gossip rounds run over a churning membership."""
+
+    def __init__(self, gossip, backend: Optional[MixBackend] = None):
+        es: Optional[ElasticSpec] = getattr(gossip, "elastic", None)
+        assert es is not None and es.enabled, \
+            "ElasticEngine requires an enabled GossipSpec.elastic"
+        comm = gossip.comm
+        if comm is None or not comm.enabled:
+            comm = CommSpec()          # uncompressed, clean, seed 0
+        if comm.channel_active or comm.schedule != "static":
+            raise ValueError(
+                "elastic mode replaces the simulation ChannelModel: move "
+                "drop_rate/straggler_rate onto ElasticSpec and keep "
+                "CommSpec.schedule='static'")
+        self.elastic = es
+        self._setup(gossip, comm, backend)
+
+    # the fused int8 hop bakes in clean static ring weights; elastic rounds
+    # carry a per-round W_t, so they stay on the explicit-matrix path
+    def _use_fused_hop(self) -> bool:
+        return False
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, slots: dict[str, PyTree]) -> CommState:
+        base = super().init_state(slots)
+        n = self.gossip.n_nodes
+        # active/prev_active must be DISTINCT buffers: the jitted step
+        # donates the whole state, and XLA rejects donating one buffer twice
+        full = jnp.ones((n,), jnp.float32)
+        full2 = jnp.ones((n,), jnp.float32)
+        staleness = {name: jnp.zeros((n,), jnp.int32) for name in slots}
+        # jnp.copy: stale buffers must not alias the live slot arrays or
+        # donated optimizer steps would invalidate them
+        stale = ({name: jax.tree.map(jnp.copy, tree)
+                  for name, tree in slots.items()}
+                 if self.elastic.tau > 0 and not self.comm.compressed else {})
+        mem = Membership(round=jnp.asarray(-1, jnp.int32), active=full,
+                         prev_active=full2, staleness=staleness, stale=stale)
+        return base._replace(elastic=mem)
+
+    # -- per-round realization ---------------------------------------------
+
+    def round_view(self, state: CommState, slot: str, rnd: Array | int
+                   ) -> RoundView:
+        """Commit (or replay) round ``rnd``'s membership transition and
+        derive the slot's publish mask, freshness, and realized ``W_t``.
+
+        The fault draw mirrors ``ChannelModel._round_masks`` key-for-key
+        (hop-0 fold, drop split before straggler split) so that at full
+        membership and ``tau = 0`` the realized matrix is bit-identical to
+        the simulation channel's ``w_t`` for the same ``(rnd, key)``.
+        """
+        es: Membership = state.elastic
+        spec = self.elastic
+        n = self.gossip.n_nodes
+        rnd = jnp.asarray(rnd, jnp.int32)
+
+        # membership transition, committed once per round
+        fresh_round = rnd > es.round
+        churn_key = jax.random.fold_in(
+            jax.random.PRNGKey(spec.seed), rnd)
+        act_new = spec.churn.active(es.active, rnd, churn_key)
+        active = jnp.where(fresh_round, act_new, es.active)
+        prev = jnp.where(fresh_round, es.active, es.prev_active)
+        joined = active * (1.0 - prev)
+        committed = jnp.where(fresh_round, rnd, es.round)
+
+        # per-slot fault draw — ChannelModel.mix's hop-0 key
+        key = jax.random.fold_in(self.chan_key(state, slot, rnd), 0)
+        sched = jnp.asarray(self.channel._subset_masks)[0]
+        link_keep = jnp.ones((n, n), jnp.float32)
+        if spec.drop_rate > 0.0:
+            k_drop, key = jax.random.split(key)
+            keep = jax.random.bernoulli(
+                k_drop, 1.0 - spec.drop_rate, (n, n)).astype(jnp.float32)
+            keep = jnp.triu(keep, 1)
+            link_keep = keep + keep.T
+        up = jnp.ones((n,), jnp.float32)
+        if spec.straggler_rate > 0.0:
+            k_straggle, key = jax.random.split(key)
+            up = jax.random.bernoulli(
+                k_straggle, 1.0 - spec.straggler_rate, (n,)
+            ).astype(jnp.float32)
+
+        publish = up * active
+        staleness = jnp.where(publish > 0, 0, es.staleness[slot] + 1)
+        fresh = (staleness <= spec.tau).astype(jnp.float32) * active
+        mask = sched * link_keep * (fresh[:, None] * fresh[None, :])
+
+        w = jnp.asarray(self.gossip.matrix, jnp.float32)
+        off = w * (1.0 - jnp.eye(n, dtype=jnp.float32))
+        w_off = off * mask
+        wt = w_off + jnp.diag(1.0 - jnp.sum(w_off, axis=1))
+
+        live_pairs = sched * (active[:, None] * active[None, :])
+        return RoundView(active=active, prev=prev, joined=joined,
+                         publish=publish, fresh=fresh, link_mask=mask,
+                         wt=wt, staleness=staleness,
+                         committed_round=committed,
+                         sched_live=jnp.sum(live_pairs) / 2.0,
+                         act_links=jnp.sum(mask) / 2.0)
+
+    def realized_wt(self, state: CommState, slot: str, rnd: Array | int
+                    ) -> Array:
+        """The effective mixing matrix this slot's round-``rnd`` mix applies
+        — the contracts validator's input."""
+        return self.round_view(state, slot, rnd).wt
+
+    def link_stats(self, state: CommState, slot: str, rnd: Array | int
+                   ) -> tuple[Array, Array]:
+        """(scheduled-live, realized) undirected link counts — the wire
+        counters' dynamic inputs; dropped = scheduled-live - realized."""
+        view = self.round_view(state, slot, rnd)
+        return view.sched_live, view.act_links
+
+    # -- join protocol ------------------------------------------------------
+
+    def _reinit_joined(self, slot: str, tree: PyTree, view: RoundView
+                       ) -> PyTree:
+        """Replace just-joined nodes' rows: consensus mean of live
+        neighbours for primal slots (projected through the registered
+        manifold map, falling back to the global live mean on an isolated
+        join), zeros for dual/tracking slots."""
+        joined = view.joined
+        if slot not in self.manifolds and slot not in ("x", "y"):
+            return jax.tree.map(
+                lambda z: z * (1.0 - _bcast(joined, z)), tree)
+
+        nbr = jnp.asarray(self.channel._subset_masks)[0]
+        wrow = nbr * view.prev[None, :]                    # live neighbours
+        cnt = jnp.sum(wrow, axis=1)
+        g_cnt = jnp.maximum(jnp.sum(view.prev), 1.0)
+
+        def mean(leaf):
+            num = jnp.einsum("ij,j...->i...", wrow.astype(leaf.dtype), leaf)
+            g = jnp.einsum("j,j...->...", view.prev.astype(leaf.dtype),
+                           leaf) / g_cnt.astype(leaf.dtype)
+            m = num / _bcast(jnp.maximum(cnt, 1.0), leaf)
+            return jnp.where(_bcast((cnt > 0).astype(jnp.float32), leaf) > 0,
+                             m, g[None])
+
+        means = jax.tree.map(mean, tree)
+        mm = self.manifolds.get(slot)
+        if mm is not None:
+            from repro.geometry import base as geometry
+            mmap = geometry.as_manifold_map(mm)
+            means = jax.tree.map(
+                lambda m, leaf: m.project(leaf), mmap, means,
+                is_leaf=lambda s: isinstance(s, geometry.Manifold))
+        return jax.tree.map(
+            lambda z, m: jnp.where(_bcast(joined, z) > 0, m, z), tree, means)
+
+    # -- one elastic gossip round ------------------------------------------
+
+    def mix(self, state: CommState, slot: str, tree: PyTree, *,
+            steps: Optional[int] = None, rnd: Array | int = 0
+            ) -> tuple[PyTree, CommState]:
+        s = self.gossip.k if steps is None else steps
+        if self.gossip.n_nodes == 1 or s == 0:
+            return tree, state
+        view = self.round_view(state, slot, rnd)
+        es: Membership = state.elastic
+        tree = self._reinit_joined(slot, tree, view)
+
+        new_staleness = dict(es.staleness)
+        new_staleness[slot] = view.staleness
+        new_stale = dict(es.stale)
+
+        if not self.comm.compressed:
+            if self.elastic.tau > 0 and slot in es.stale:
+                pub = view.publish
+                stale_old = es.stale[slot]
+                z = tree
+                for _ in range(s):
+                    # each endpoint contributes its published value when it
+                    # sent this round, its last-received buffer otherwise;
+                    # the self-weight always applies to the true local state
+                    b = jax.tree.map(
+                        lambda x, st: _bcast(pub, x) * x
+                        + (1.0 - _bcast(pub, x)) * st.astype(x.dtype),
+                        z, stale_old)
+                    mixed_b = self.backend.mix_wt(self.gossip, b, view.wt,
+                                                  steps=1)
+                    d = jnp.diag(view.wt)
+                    z = jax.tree.map(
+                        lambda mb, x, bb: mb + _bcast(d, x) * (x - bb),
+                        mixed_b, z, b)
+                new_stale[slot] = jax.tree.map(
+                    lambda st, x: jnp.where(_bcast(pub, x) > 0, x,
+                                            st.astype(x.dtype)),
+                    stale_old, tree)
+                mixed = z
+            else:
+                mixed = self.backend.mix_wt(self.gossip, tree, view.wt,
+                                            steps=s)
+            mem = Membership(round=view.committed_round, active=view.active,
+                             prev_active=view.prev, staleness=new_staleness,
+                             stale=new_stale)
+            return mixed, state._replace(elastic=mem)
+
+        # compressed: the CHOCO hats double as the stale buffers.  A joining
+        # node's hat resets to zero; only publishers fold a payload, so a
+        # straggler's public copy stays put and keeps mixing until its links
+        # age out of `fresh`.
+        k_quant, _ = self._keys(state, slot, rnd)
+        pub = view.publish
+        hat = state.hats[slot]
+        hat_base = jax.tree.map(
+            lambda h: h * (1.0 - _bcast(view.joined, h)), hat)
+        source = (jax.tree.map(lambda x, h: x - h, tree, hat_base)
+                  if self.comm.error_feedback else tree)
+        payload, _ = self._compress(k_quant, source)
+        upd = (jax.tree.map(lambda h, p: h + p, hat_base, payload)
+               if self.comm.error_feedback else payload)
+        hat_new = jax.tree.map(
+            lambda u, h: jnp.where(_bcast(pub, u) > 0, u, h), upd, hat_base)
+        mixed_hat = self.backend.mix_wt(self.gossip, hat_new, view.wt,
+                                        steps=s)
+        gamma, deltas = self._gamma(state, slot, source, payload)
+        # inactive rows of W_t are identity rows, so mixed_hat == hat_new
+        # there and departed nodes receive a zero consensus delta for free
+        mixed = jax.tree.map(lambda x, mh, h: x + gamma * (mh - h),
+                             tree, mixed_hat, hat_new)
+        new_hats = dict(state.hats)
+        new_hats[slot] = hat_new
+        mem = Membership(round=view.committed_round, active=view.active,
+                         prev_active=view.prev, staleness=new_staleness,
+                         stale=new_stale)
+        return mixed, CommState(hats=new_hats, key=state.key, deltas=deltas,
+                                elastic=mem)

@@ -61,6 +61,9 @@ class CommState(NamedTuple):
     # (E||C(r) - r||^2 <= (1 - delta)||r||^2); only tracked when
     # CommSpec.gamma_mode == "adaptive"
     deltas: Any = None
+    # elastic execution-mode membership (repro.comms.elastic.Membership);
+    # None outside elastic mode so existing states keep their treedef
+    elastic: Any = None
 
 
 def _salt(slot: str) -> int:
@@ -74,6 +77,13 @@ class CommEngine:
         comm: Optional[CommSpec] = gossip.comm
         assert comm is not None and comm.enabled, \
             "CommEngine requires an enabled GossipSpec.comm"
+        self._setup(gossip, comm, backend)
+
+    def _setup(self, gossip, comm: CommSpec,
+               backend: Optional[MixBackend]) -> None:
+        """Shared constructor body — ``ElasticEngine`` calls this with a
+        substitute (disabled) ``CommSpec`` when the gossip spec carries no
+        comm config of its own."""
         self.gossip = gossip
         self.comm = comm
         self.compressor = make_compressor(comm)
@@ -82,6 +92,15 @@ class CommEngine:
         # every wire touch below goes through this strategy object
         self.backend: MixBackend = backend if backend is not None \
             else resolve_backend(gossip)
+        # slot -> manifold map, registered by the optimizer so the elastic
+        # join protocol can project re-initialized slots; unused here
+        self.manifolds: dict[str, Any] = {}
+
+    def register_manifolds(self, maps: dict[str, Any]) -> None:
+        """Record per-slot manifold maps (``{"x": problem.manifold_map}``).
+        The base engine never reads them; the elastic engine projects a
+        rejoining node's consensus-mean re-init through them."""
+        self.manifolds.update({k: v for k, v in maps.items() if v is not None})
 
     # -- state --------------------------------------------------------------
 
@@ -263,6 +282,11 @@ class CommEngine:
 
 def maybe_engine(gossip,
                  backend: Optional[MixBackend] = None) -> Optional[CommEngine]:
+    elastic = getattr(gossip, "elastic", None)
+    if elastic is not None and elastic.enabled:
+        # lazy: elastic.py imports this module at its top level
+        from repro.comms.elastic import ElasticEngine
+        return ElasticEngine(gossip, backend=backend)
     comm = getattr(gossip, "comm", None)
     if comm is not None and comm.enabled:
         return CommEngine(gossip, backend=backend)

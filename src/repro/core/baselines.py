@@ -95,6 +95,9 @@ class GTGDA:
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
         self.backend = comms_layer.resolve_backend(gossip)
         self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
+        if self.engine is not None:
+            # elastic join protocol: project rejoined x through the geometry
+            self.engine.register_manifolds({"x": problem.manifold_map})
         self.telemetry = telemetry if telemetry is not None \
             and telemetry.enabled else None
 
@@ -182,6 +185,9 @@ class DMHSGD:
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
         self.backend = comms_layer.resolve_backend(gossip)
         self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
+        if self.engine is not None:
+            # elastic join protocol: project rejoined x through the geometry
+            self.engine.register_manifolds({"x": problem.manifold_map})
         self.telemetry = telemetry if telemetry is not None \
             and telemetry.enabled else None
 
@@ -272,6 +278,9 @@ class GTSRVR:
         self.problem, self.gossip, self.hyper = problem, gossip, hyper
         self.backend = comms_layer.resolve_backend(gossip)
         self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
+        if self.engine is not None:
+            # elastic join protocol: project rejoined x through the geometry
+            self.engine.register_manifolds({"x": problem.manifold_map})
         self.telemetry = telemetry if telemetry is not None \
             and telemetry.enabled else None
 

@@ -112,6 +112,10 @@ class DecentralizedGDA:
         # the optimizer math below never sees the difference
         self.backend = comms_layer.resolve_backend(gossip)
         self.engine = comms_layer.maybe_engine(gossip, backend=self.backend)
+        if self.engine is not None:
+            # the elastic join protocol projects a rejoining node's
+            # consensus-mean x re-init through the problem's geometry
+            self.engine.register_manifolds({"x": problem.manifold_map})
         # static config captured by the jitted closure, like the engine;
         # None (or enabled=False) compiles the exact pre-obs program
         self.telemetry = telemetry if telemetry is not None \

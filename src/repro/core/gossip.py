@@ -22,11 +22,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Literal
+from typing import TYPE_CHECKING, Literal, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+if TYPE_CHECKING:  # structural types only — no runtime comms import
+    from repro.comms.api import CommLike, ElasticLike, MixBackendProtocol
 
 Array = jax.Array
 Topology = Literal["ring", "full", "torus", "star"]
@@ -169,14 +172,21 @@ class GossipSpec:
     n_nodes: int = 16
     k_steps: int | None = None      # None => Theorem-1 prescription
     self_weight: float = 1.0 / 3.0
-    # Optional repro.comms.CommSpec (typed loosely to keep core free of a
-    # comms import).  When set and enabled, the optimizers route mixing
-    # through repro.comms.layer.CommEngine instead of the exact paths below.
-    comm: object | None = None
-    # Optional repro.comms.backend.MixBackend (typed loosely for the same
-    # reason).  None => the stacked reference backend; launch/steps.py plugs
-    # in a ShardMapBackend when the training mesh has a real node axis.
-    backend: object | None = None
+    # Optional repro.comms.CommSpec — typed against the import-light
+    # repro.comms.api.CommLike Protocol, so core type-checks the surface
+    # without importing comms machinery at runtime.  When set and enabled,
+    # the optimizers route mixing through repro.comms.layer.CommEngine
+    # instead of the exact paths below.
+    comm: Optional["CommLike"] = None
+    # Optional mix backend (repro.comms.api.MixBackendProtocol) or a
+    # registry name ("stacked" | "shard_map") resolved by resolve_backend.
+    # None => the stacked reference backend; launch/steps.py plugs in a
+    # ShardMapBackend when the training mesh has a real node axis.
+    backend: Union["MixBackendProtocol", str, None] = None
+    # Optional repro.comms.elastic.ElasticSpec (api.ElasticLike).  When set
+    # and enabled, mixing runs in the elastic execution mode: membership
+    # churn, stale-hop tolerance, realized W_t over the live subgraph.
+    elastic: Optional["ElasticLike"] = None
 
     @property
     def matrix(self) -> np.ndarray:

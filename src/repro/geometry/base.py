@@ -176,13 +176,33 @@ def check_retraction_name(kind: str) -> str:
 # ---------------------------------------------------------------------------
 
 
+# once-per-process flag for the legacy-bool deprecation below; tests reset
+# it to re-assert the warning fires exactly once
+_warned_stiefel_mask = False
+
+
+def _warn_stiefel_mask() -> None:
+    global _warned_stiefel_mask
+    if _warned_stiefel_mask:
+        return
+    _warned_stiefel_mask = True
+    import warnings
+    warnings.warn(
+        "stiefel_mask bool pytrees are deprecated; pass a manifold_map "
+        "(registry-name strings or Manifold instances) instead",
+        DeprecationWarning, stacklevel=3)
+
+
 def _as_manifold(spec) -> Manifold:
     if isinstance(spec, Manifold):
         return spec
     if isinstance(spec, str):
         return get(spec)
-    if isinstance(spec, (bool, int)) or spec is None:
+    if isinstance(spec, bool):
         # legacy stiefel_mask bools: True -> Stiefel, False -> Euclidean
+        _warn_stiefel_mask()
+        return get("stiefel") if spec else get("euclidean")
+    if isinstance(spec, int) or spec is None:
         return get("stiefel") if spec else get("euclidean")
     raise TypeError(f"cannot interpret {spec!r} as a manifold")
 

@@ -8,6 +8,7 @@ shapes.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -23,13 +24,39 @@ from repro.objectives import lm as lm_obj
 PyTree = Any
 
 
-def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """One-object trainer config — the typed alternative to
+    ``build_trainer``'s keyword sprawl.
+
+    Every field mirrors the corresponding ``build_trainer`` keyword;
+    ``comm`` overrides the config's ``comm_spec()`` when set, and
+    ``elastic`` (a ``repro.comms.elastic.ElasticSpec``) switches gossip
+    into the elastic execution mode.
+    """
+
+    optimizer: str = "drsgda"
+    topology: str = "ring"
+    mix_backend: Optional[str] = None   # registry name; None => cfg knob
+    comm: Any = None                    # CommSpec override; None => cfg
+    elastic: Any = None                 # ElasticSpec or None
+    telemetry: Any = None               # repro.obs.Telemetry or None
+    hyper: Optional[GDAHyper] = None
+
+
+def build_trainer(cfg: ModelConfig, n_nodes: int,
+                  spec: Optional[TrainSpec] = None, *,
+                  optimizer: str = "drsgda",
                   hyper: Optional[GDAHyper] = None, topology: str = "ring",
                   dtype=jnp.float32, mesh=None,
-                  mix_backend: Optional[str] = None, telemetry=None):
+                  mix_backend: Optional[str] = None, telemetry=None,
+                  elastic=None):
     """Returns (opt, problem).  Default hyper uses k=1 gossip per step (the
     paper's experimental regime); pass k_override=None-in-spec via
     GossipSpec(k_steps=None) + hyper k_override to use the Theorem-1 k.
+
+    Pass a :class:`TrainSpec` as the single ``spec`` argument (the keyword
+    form keeps working verbatim; ``spec`` wins when both are given).
 
     ``mesh`` + ``mix_backend`` (default: the config's ``mix_backend`` knob)
     select how gossip hops execute: given a training mesh whose node axis
@@ -44,6 +71,12 @@ def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
     from repro.comms.backend import make_backend
     from repro.launch.mesh import gossip_axes
 
+    comm = None
+    if spec is not None:
+        optimizer, topology = spec.optimizer, spec.topology
+        mix_backend, telemetry = spec.mix_backend, spec.telemetry
+        comm, elastic, hyper = spec.comm, spec.elastic, spec.hyper
+
     template = jax.eval_shape(
         lambda k: T.init_params(k, cfg, dtype), jax.random.PRNGKey(0))
     problem = lm_obj.make_lm_problem(cfg, template)
@@ -51,7 +84,8 @@ def build_trainer(cfg: ModelConfig, n_nodes: int, *, optimizer: str = "drsgda",
         mix_backend if mix_backend is not None else cfg.mix_backend,
         mesh=mesh, axis=gossip_axes(mesh) if mesh is not None else "node")
     gossip = GossipSpec(topology=topology, n_nodes=n_nodes, k_steps=1,
-                        comm=cfg.comm_spec(), backend=backend)
+                        comm=comm if comm is not None else cfg.comm_spec(),
+                        backend=backend, elastic=elastic)
     hyper = hyper or GDAHyper(alpha=0.5, beta=0.02, eta=0.05)
     opt = OPTIMIZERS[optimizer](problem, gossip, hyper, telemetry=telemetry)
     return opt, problem

@@ -27,7 +27,7 @@ from repro import checkpoint, configs
 from repro.core.gda import GDAHyper
 from repro.core.metric import convergence_metric
 from repro.data.synthetic import TokenStream
-from repro.launch.steps import build_trainer, init_train_state
+from repro.launch.steps import TrainSpec, build_trainer, init_train_state
 from repro.obs import Telemetry
 
 
@@ -66,6 +66,14 @@ def main(argv=None) -> int:
     ap.add_argument("--telemetry-run", default="",
                     help="run name for the event log / trace files "
                          "(default: <optimizer>-<arch>)")
+    ap.add_argument("--churn", default="static",
+                    choices=["static", "random"],
+                    help="elastic-gossip churn schedule (random: seeded "
+                         "per-round leave/rejoin Markov draws)")
+    ap.add_argument("--churn-leave-rate", type=float, default=0.05)
+    ap.add_argument("--churn-join-rate", type=float, default=0.5)
+    ap.add_argument("--tau", type=int, default=0,
+                    help="elastic stale-hop tolerance (rounds)")
     args = ap.parse_args(argv)
 
     telemetry = None
@@ -76,9 +84,17 @@ def main(argv=None) -> int:
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     hyper = GDAHyper(alpha=args.alpha, beta=args.beta, eta=args.eta)
-    opt, problem = build_trainer(cfg, args.nodes, optimizer=args.optimizer,
-                                 hyper=hyper, topology=args.topology,
-                                 telemetry=telemetry)
+    elastic = None
+    if args.churn != "static" or args.tau > 0:
+        from repro.comms.elastic import ChurnSchedule, ElasticSpec
+        elastic = ElasticSpec(
+            churn=ChurnSchedule(kind=args.churn,
+                                leave_rate=args.churn_leave_rate,
+                                join_rate=args.churn_join_rate),
+            tau=args.tau, seed=args.seed)
+    spec = TrainSpec(optimizer=args.optimizer, topology=args.topology,
+                     elastic=elastic, telemetry=telemetry, hyper=hyper)
+    opt, problem = build_trainer(cfg, args.nodes, spec)
 
     stream = TokenStream(n_nodes=args.nodes, batch_per_node=args.batch_per_node,
                          seq_len=args.seq_len, vocab_size=cfg.vocab_size,
@@ -124,6 +140,16 @@ def main(argv=None) -> int:
                     telemetry.dashboard(problem, state.x, state.y, batch,
                                         step=t + 1,
                                         extra={"loss": row["loss"]})
+                    mem = getattr(state.comm, "elastic", None)
+                    if mem is not None:
+                        act = np.asarray(mem.active)
+                        prev = np.asarray(mem.prev_active)
+                        telemetry.event("membership", {
+                            "live": int(act.sum()),
+                            "joins": int(((act > 0) & (prev == 0)).sum()),
+                            "leaves": int(((act == 0) & (prev > 0)).sum()),
+                            "active": act.astype(int).tolist(),
+                        }, step=t + 1)
             if args.checkpoint_every and (t + 1) % args.checkpoint_every == 0 \
                     and args.checkpoint_dir:
                 with _span(telemetry, "checkpoint", step=t + 1):

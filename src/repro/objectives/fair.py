@@ -39,7 +39,14 @@ def init_cnn(key, image_hw: int = 14, channels: int = 1, n_classes: int = 3,
     }
 
 
+def cnn_manifold_map(params: dict) -> dict:
+    return {"conv1": "euclidean", "conv2": "euclidean",
+            "fc1": "stiefel", "head": "stiefel"}
+
+
 def cnn_stiefel_mask(params: dict) -> dict:
+    """Legacy bool view of :func:`cnn_manifold_map` (kept for callers; new
+    code should use the manifold map)."""
     return {"conv1": False, "conv2": False, "fc1": True, "head": True}
 
 
@@ -94,7 +101,7 @@ def make_fair_problem(params_template: dict, n_classes: int = 3,
     return MinimaxProblem(
         loss_fn=functools.partial(fair_loss, n_classes=n_classes, rho=rho),
         project_y=project_simplex,
-        stiefel_mask=cnn_stiefel_mask(params_template),
+        manifold_map=cnn_manifold_map(params_template),
         y_star=functools.partial(fair_y_star, n_classes=n_classes, rho=rho),
         name="fair-classification",
     )
@@ -124,7 +131,7 @@ def make_dro_problem(params_template: dict, n_groups: int = 3) -> MinimaxProblem
     return MinimaxProblem(
         loss_fn=functools.partial(dro_loss, n_groups=n_groups),
         project_y=project_simplex,
-        stiefel_mask=cnn_stiefel_mask(params_template),
+        manifold_map=cnn_manifold_map(params_template),
         y_star=functools.partial(dro_y_star, n_groups=n_groups),
         name="dro-classification",
     )

@@ -90,6 +90,18 @@ def account_mix(counters: Array, gossip, engine, backend,
         wire: Array | float = raw
         active: Array | float = sched
         dropped: Array | float = 0.0
+    elif getattr(engine, "elastic", None) is not None:
+        # elastic execution mode: only live links carry payload.  Re-derive
+        # the round's realized link mask from the same RoundView the mix
+        # consumed (identical key schedule), count live-scheduled vs
+        # realized pairs, and scale the wire estimate by the realized
+        # fraction of the static graph.
+        wire, raw = engine.wire_round_bytes(tree, steps)
+        sched_live, act = engine.link_stats(comm_state, slot, rnd)
+        sched_live = sched_live * float(steps)
+        act = act * float(steps)
+        wire = wire * act / jnp.maximum(float(steps) * n_links, 1.0)
+        active, dropped = act, sched_live - act
     else:
         wire, raw = engine.wire_round_bytes(tree, steps)
         if engine.channel.trivial:

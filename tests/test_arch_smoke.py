@@ -62,9 +62,9 @@ def test_smoke_forward_and_train_step(arch):
         assert a.shape == b.shape
         assert bool(jnp.isfinite(a.astype(jnp.float32)).all())
     # Stiefel leaves stay feasible after the retraction step
-    from repro.core.minimax import validate_stiefel
-    assert float(validate_stiefel(
-        jax.tree.map(lambda l: l[0], state.x), problem.stiefel_mask)) < 1e-3
+    from repro.core.minimax import validate_manifold
+    assert float(validate_manifold(
+        jax.tree.map(lambda l: l[0], state.x), problem.manifold_map)) < 1e-3
     # at least one leaf is manifold-constrained for attention archs
     n_stiefel = sum(bool(m) for m in jax.tree.leaves(problem.stiefel_mask))
     if cfg.family != "ssm":

@@ -281,9 +281,9 @@ def _toy_problem():
 
     x0 = {"w": M.random_stiefel(jax.random.PRNGKey(0), d, r),
           "bias": jnp.zeros((4,))}
-    mask = {"w": True, "bias": False}
+    mmap = {"w": "stiefel", "bias": "euclidean"}
     return MinimaxProblem(
-        loss_fn=loss_fn, stiefel_mask=mask,
+        loss_fn=loss_fn, manifold_map=mmap,
         project_y=lambda y: jnp.clip(y, 0.0, 1.0)), x0, ngrp
 
 

@@ -1,0 +1,461 @@
+"""Elastic asynchronous gossip: churn, staleness, and the typed comms API.
+
+Covers the execution-mode acceptance criteria:
+
+* elastic off (static full membership, clean channel) => the optimizer
+  builds the *same program* as main (no engine), so trajectories are
+  bit-identical on both backends;
+* ``tau = 0`` realizes bit-for-bit the simulation ``ChannelModel``'s drop
+  semantics (same key schedule, same mask algebra, same backend
+  expressions);
+* n=2 ring with one departure degenerates to identity mixing and leaves
+  the survivor untouched;
+* rejoin is deterministic under a fixed seed, and a rejoined node's x is
+  re-initialized feasibly (consensus mean projected through the manifold);
+* every realized W_t stays symmetric doubly stochastic over the live
+  subgraph (contracts validator);
+* the ``repro.comms.api`` facade: Protocols + the backend string registry;
+* the ``stiefel_mask`` legacy path warns exactly once and derives the same
+  maps; ``TrainSpec`` reproduces the keyword ``build_trainer`` wiring.
+
+The shard_map tests skip below 8 devices and are re-run in a forced-device
+subprocess (same pattern as test_mix_backend_equiv), so tier-1 covers them.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms.backend import ShardMapBackend, StackedBackend
+from repro.comms.elastic import (ChurnSchedule, ElasticEngine, ElasticSpec,
+                                 Membership)
+from repro.comms.layer import CommEngine, maybe_engine
+from repro.comms.spec import CommSpec
+from repro.core.gossip import GossipSpec
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _mesh():
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices())[:8].reshape(8), ("node",))
+
+
+def _assert_bit_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert bool(jnp.all(x == y)), \
+            f"max |diff| = {float(jnp.max(jnp.abs(x - y)))}"
+
+
+def _assert_close(a, b, atol=1e-6):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol,
+                                   rtol=0)
+
+
+def _x(n, d=6, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_spec_enabled_gating():
+    assert not ElasticSpec().enabled
+    assert not ElasticSpec(churn=ChurnSchedule()).enabled
+    assert ElasticSpec(straggler_rate=0.1).enabled
+    assert ElasticSpec(drop_rate=0.1).enabled
+    assert ElasticSpec(churn=ChurnSchedule(
+        kind="scripted", events=((1, "leave", 0),))).enabled
+    assert ElasticSpec(churn=ChurnSchedule(kind="random")).enabled
+
+
+def test_disabled_elastic_builds_no_engine():
+    """Static full membership + clean channel => maybe_engine falls through,
+    so the compiled program is the exact pre-elastic one by construction."""
+    g = GossipSpec(topology="ring", n_nodes=4, elastic=ElasticSpec())
+    assert maybe_engine(g) is None
+    g2 = GossipSpec(topology="ring", n_nodes=4)
+    assert maybe_engine(g2) is None
+
+
+def test_elastic_rejects_simulation_channel():
+    comm = CommSpec(drop_rate=0.3)
+    g = GossipSpec(topology="ring", n_nodes=4, comm=comm,
+                   elastic=ElasticSpec(straggler_rate=0.2))
+    with pytest.raises(ValueError, match="ElasticSpec"):
+        ElasticEngine(g)
+
+
+def test_membership_is_a_state_leaf():
+    g = GossipSpec(topology="ring", n_nodes=4,
+                   elastic=ElasticSpec(straggler_rate=0.2))
+    eng = ElasticEngine(g)
+    st = eng.init_state({"x": _x(4)})
+    assert isinstance(st.elastic, Membership)
+    leaves = jax.tree.leaves(st)
+    assert any(l.shape == (4,) for l in leaves)  # the active mask rides along
+    # the traced transition is committed once per round across slots
+    st2 = eng.init_state({"x": _x(4), "y": _x(4)})
+    _, st2 = eng.mix(st2, "x", _x(4), steps=1, rnd=0)
+    r_after_x = int(st2.elastic.round)
+    _, st2 = eng.mix(st2, "y", _x(4), steps=1, rnd=0)
+    assert int(st2.elastic.round) == r_after_x == 0
+    np.testing.assert_array_equal(np.asarray(st2.elastic.prev_active),
+                                  np.ones(4))
+
+
+# ---------------------------------------------------------------------------
+# churn schedules
+# ---------------------------------------------------------------------------
+
+
+def test_scripted_schedule_timeline():
+    churn = ChurnSchedule(kind="scripted",
+                          events=((2, "leave", 1), (5, "join", 1)))
+    act = jnp.ones((4,), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    masks = [np.asarray(churn.active(act, r, key)) for r in range(7)]
+    assert masks[0][1] == 1 and masks[1][1] == 1
+    assert masks[2][1] == 0 and masks[4][1] == 0          # left at round 2
+    assert masks[5][1] == 1 and masks[6][1] == 1          # rejoined at 5
+    assert all(m[[0, 2, 3]].all() for m in masks)         # others untouched
+
+
+def test_random_schedule_is_seeded_and_pins_node0():
+    churn = ChurnSchedule(kind="random", leave_rate=0.5, join_rate=0.5)
+    act = jnp.ones((8,), jnp.float32)
+    key = jax.random.PRNGKey(3)
+    a = np.asarray(churn.active(act, 4, key))
+    b = np.asarray(churn.active(act, 4, key))
+    np.testing.assert_array_equal(a, b)                   # same key, same draw
+    draws = np.stack([np.asarray(churn.active(act, r, jax.random.fold_in(
+        key, r))) for r in range(32)])
+    assert (draws[:, 0] == 1).all()                       # node 0 pinned live
+    assert draws.min() == 0                               # someone does leave
+
+
+# ---------------------------------------------------------------------------
+# tau = 0: bit-for-bit the simulation channel's drop semantics
+# ---------------------------------------------------------------------------
+
+
+def _tau0_pair(n=8, backend=None):
+    comm = CommSpec(drop_rate=0.2, straggler_rate=0.4)
+    sim = CommEngine(GossipSpec(topology="ring", n_nodes=n, comm=comm),
+                     backend=backend)
+    ela = ElasticEngine(GossipSpec(
+        topology="ring", n_nodes=n,
+        elastic=ElasticSpec(tau=0, drop_rate=0.2, straggler_rate=0.4)),
+        backend=backend)
+    return sim, ela
+
+
+def test_tau0_bit_identical_to_channel_drops_stacked():
+    sim, ela = _tau0_pair()
+    x = _x(8)
+    st_s, st_e = sim.init_state({"x": x}), ela.init_state({"x": x})
+    z_s = z_e = x
+    for rnd in range(20):
+        z_s, st_s = sim.mix(st_s, "x", z_s, steps=1, rnd=rnd)
+        z_e, st_e = ela.mix(st_e, "x", z_e, steps=1, rnd=rnd)
+        _assert_bit_equal(z_s, z_e)
+
+
+@multi_device
+def test_tau0_bit_identical_to_channel_drops_shard_map():
+    backend = ShardMapBackend(_mesh(), axis="node")
+    sim, ela = _tau0_pair(backend=backend)
+    x = _x(8)
+    st_s, st_e = sim.init_state({"x": x}), ela.init_state({"x": x})
+    sim_step = jax.jit(lambda st, z, r: sim.mix(st, "x", z, steps=1, rnd=r))
+    ela_step = jax.jit(lambda st, z, r: ela.mix(st, "x", z, steps=1, rnd=r))
+    z_s = z_e = x
+    for rnd in range(10):
+        z_s, st_s = sim_step(st_s, z_s, rnd)
+        z_e, st_e = ela_step(st_e, z_e, rnd)
+        _assert_bit_equal(z_s, z_e)
+
+
+@multi_device
+def test_elastic_wt_application_equal_across_backends():
+    """The same realized W_t applied by mix_wt must agree between the
+    stacked einsum and the shard_map per-link ring path (same tolerance
+    as the existing cross-backend channel tests: summation order differs)."""
+    spec = GossipSpec(topology="ring", n_nodes=8, k_steps=1)
+    ela = ElasticEngine(GossipSpec(
+        topology="ring", n_nodes=8,
+        elastic=ElasticSpec(churn=ChurnSchedule(kind="random",
+                                                leave_rate=0.3))))
+    st = ela.init_state({"x": _x(8)})
+    wt = ela.realized_wt(st, "x", 5)
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(2), (8, 33, 7)),
+            "b": jax.random.normal(jax.random.PRNGKey(4), (8, 129))}
+    stk, shm = StackedBackend(), ShardMapBackend(_mesh(), axis="node")
+    a = jax.jit(lambda t, w: stk.mix_wt(spec, t, w))(tree, wt)
+    b = jax.jit(lambda t, w: shm.mix_wt(spec, t, w))(tree, wt)
+    _assert_close(a, b, atol=1e-6)
+
+
+def test_equivalence_under_8_forced_devices():
+    if len(jax.devices()) >= 8:
+        pytest.skip("already multi-device; in-process tests cover this")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         os.path.abspath(__file__), "-k", "shard_map or across_backends"],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.join(REPO, "tests"))
+    assert out.returncode == 0, \
+        (out.stdout[-3000:] + "\n" + out.stderr[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# departures, staleness, rejoin
+# ---------------------------------------------------------------------------
+
+
+def test_n2_ring_departure_is_identity_round():
+    """Degenerate case: one of two nodes leaves — the realized W_t is the
+    identity and the survivor's value passes through unchanged."""
+    churn = ChurnSchedule(kind="scripted", events=((1, "leave", 1),))
+    eng = ElasticEngine(GossipSpec(
+        topology="ring", n_nodes=2, elastic=ElasticSpec(churn=churn)))
+    x = _x(2)
+    st = eng.init_state({"x": x})
+    z, st = eng.mix(st, "x", x, steps=1, rnd=0)     # both live: real mix
+    assert not bool(jnp.all(z == x))
+    wt = np.asarray(eng.realized_wt(st, "x", 1))
+    np.testing.assert_array_equal(wt, np.eye(2, dtype=np.float32))
+    z2, st = eng.mix(st, "x", z, steps=1, rnd=1)    # node 1 gone: identity
+    np.testing.assert_array_equal(np.asarray(z2[0]), np.asarray(z[0]))
+
+
+def test_departed_rows_are_identity_and_wt_doubly_stochastic():
+    churn = ChurnSchedule(kind="scripted", events=((0, "leave", 2),
+                                                   (0, "leave", 5)))
+    eng = ElasticEngine(GossipSpec(
+        topology="ring", n_nodes=8,
+        elastic=ElasticSpec(churn=churn, drop_rate=0.2)))
+    st = eng.init_state({"x": _x(8)})
+    wt = np.asarray(eng.realized_wt(st, "x", 0))
+    np.testing.assert_allclose(wt.sum(0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(wt.sum(1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(wt, wt.T, atol=0)
+    for i in (2, 5):
+        np.testing.assert_array_equal(wt[i], np.eye(8, dtype=wt.dtype)[i])
+
+
+def test_stale_hop_tolerance_keeps_links_alive():
+    """With every node straggling, tau=0 freezes gossip (W_t = I) while
+    tau>=1 keeps mixing against the last-received buffers."""
+    x = _x(8)
+    frozen = ElasticEngine(GossipSpec(
+        topology="ring", n_nodes=8,
+        elastic=ElasticSpec(tau=0, straggler_rate=1.0)))
+    st = frozen.init_state({"x": x})
+    z, st = frozen.mix(st, "x", x, steps=1, rnd=0)
+    _assert_bit_equal(z, x)                              # nobody published
+
+    tol = ElasticEngine(GossipSpec(
+        topology="ring", n_nodes=8,
+        elastic=ElasticSpec(tau=2, straggler_rate=1.0)))
+    st = tol.init_state({"x": x})
+    z, st = tol.mix(st, "x", x, steps=1, rnd=0)
+    assert not bool(jnp.all(z == x))                     # stale mixing ran
+    # beyond tau the links age out and gossip freezes again
+    for rnd in range(1, 5):
+        z_prev = z
+        z, st = tol.mix(st, "x", z, steps=1, rnd=rnd)
+    _assert_bit_equal(z, z_prev)
+
+
+def test_rejoin_reinit_consensus_mean_and_determinism():
+    """A rejoining node's x is replaced by its live neighbours' consensus
+    mean (projected through the registered manifold); two runs with the
+    same seed are bit-identical."""
+    from repro import geometry
+    churn = ChurnSchedule(kind="scripted",
+                          events=((1, "leave", 3), (3, "join", 3)))
+
+    def run():
+        eng = ElasticEngine(GossipSpec(
+            topology="ring", n_nodes=6,
+            elastic=ElasticSpec(churn=churn, seed=11)))
+        eng.register_manifolds({"x": "stiefel"})
+        key = jax.random.PRNGKey(0)
+        x = jax.vmap(lambda k: geometry.get("stiefel").rand(k, 8, 2))(
+            jax.random.split(key, 6))
+        st = eng.init_state({"x": x})
+        z = x
+        for rnd in range(3):                       # node 3 leaves at rnd 3
+            z, st = eng.mix(st, "x", z, steps=1, rnd=rnd)
+        # at the join round, the rejoined slot is replaced by the live
+        # neighbours' consensus mean projected through the manifold —
+        # inspect the reinit itself, before that round's convex mixing
+        # (which, like any gossip hop, only the next retraction re-feasifies)
+        view = eng.round_view(st, "x", 3)
+        reinit = np.asarray(eng._reinit_joined("x", z, view))
+        z4, st = eng.mix(st, "x", z, steps=1, rnd=3)
+        z5, st = eng.mix(st, "x", z4, steps=1, rnd=4)
+        return reinit, np.asarray(z5)
+
+    (ra, a), (rb, b) = run(), run()
+    np.testing.assert_array_equal(a, b)            # fixed seed => bit-equal
+    np.testing.assert_array_equal(ra, rb)
+    w = ra[3]                                      # feasible consensus mean
+    assert np.abs(w.T @ w - np.eye(2)).max() < 1e-5
+
+
+def test_compressed_elastic_hats_gate_on_publish():
+    """In compressed mode the CHOCO hats are the stale buffers: a joining
+    node's hat resets to zero, non-publishers' hats stay put."""
+    comm = CommSpec(compressor="int8", error_feedback=True, gamma=0.8)
+    churn = ChurnSchedule(kind="scripted",
+                          events=((1, "leave", 2), (2, "join", 2)))
+    eng = ElasticEngine(GossipSpec(
+        topology="ring", n_nodes=4, comm=comm,
+        elastic=ElasticSpec(churn=churn, tau=1)))
+    x = _x(4)
+    st = eng.init_state({"x": x})
+    z = x
+    for rnd in range(4):
+        z, st = eng.mix(st, "x", z, steps=1, rnd=rnd)
+        assert np.isfinite(np.asarray(z)).all()
+    # round 2 was the join: node 2's hat restarted from zero then folded
+    # exactly one payload; all nodes' hats stay finite
+    assert np.isfinite(np.asarray(st.hats["x"])).all()
+
+
+def test_contracts_elastic_sweep_is_clean():
+    from repro.analysis.contracts import elastic_sweep_findings
+    assert elastic_sweep_findings(rounds=25) == []
+
+
+# ---------------------------------------------------------------------------
+# wire counters: only live links count
+# ---------------------------------------------------------------------------
+
+
+def test_wire_counters_count_only_live_links():
+    from repro.obs import wire
+    churn = ChurnSchedule(kind="scripted", events=((0, "leave", 2),))
+    g = GossipSpec(topology="ring", n_nodes=8,
+                   elastic=ElasticSpec(churn=churn))
+    eng = ElasticEngine(g)
+    x = _x(8)
+    st = eng.init_state({"x": x})
+    c = wire.account_mix(wire.zero_counters(), g, eng, eng.backend,
+                         st, "x", x, 1, 0)
+    got = wire.unpack(c)
+    # node 2 left: its two incident ring links are not scheduled-live; the
+    # remaining 6 of 8 are realized (no faults configured)
+    assert got.active_links == 6.0
+    assert got.dropped_links == 0.0
+    assert got.wire_bytes < got.raw_bytes  # wire scales by live fraction
+
+
+# ---------------------------------------------------------------------------
+# repro.comms.api: protocols + backend registry
+# ---------------------------------------------------------------------------
+
+
+def test_protocols_match_runtime_classes():
+    from repro.comms import api
+    assert isinstance(CommSpec(), api.CommLike)
+    assert isinstance(ElasticSpec(), api.ElasticLike)
+    assert isinstance(StackedBackend(), api.MixBackendProtocol)
+
+
+def test_backend_registry_strings():
+    from repro.comms import api
+    from repro.comms.backend import make_backend, resolve_backend
+    assert set(api.backend_names()) >= {"stacked", "shard_map"}
+    assert isinstance(make_backend("stacked"), StackedBackend)
+    with pytest.raises(ValueError, match="shard_map"):
+        make_backend("shard_map")          # no mesh
+    with pytest.raises(ValueError, match="registered"):
+        make_backend("nope")
+    # GossipSpec.backend accepts a registry name
+    g = GossipSpec(topology="ring", n_nodes=4, backend="stacked")
+    assert isinstance(resolve_backend(g), StackedBackend)
+    tree = {"w": _x(4)}
+    _assert_bit_equal(g.mix(tree, steps=1),
+                      GossipSpec(topology="ring", n_nodes=4).mix(tree,
+                                                                 steps=1))
+
+
+# ---------------------------------------------------------------------------
+# stiefel_mask deprecation + TrainSpec
+# ---------------------------------------------------------------------------
+
+
+def test_stiefel_mask_warns_once_and_maps_unchanged():
+    import warnings
+
+    from repro.core.minimax import MinimaxProblem, project_simplex
+    from repro.geometry import base as gbase
+
+    def loss(x, y, b):
+        return jnp.sum(x["w"]) + jnp.sum(y)
+
+    gbase._warned_stiefel_mask = False
+    with pytest.warns(DeprecationWarning, match="stiefel_mask"):
+        legacy = MinimaxProblem(loss_fn=loss, project_y=project_simplex,
+                                stiefel_mask={"w": True, "b": False})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # second use must stay silent
+        legacy2 = MinimaxProblem(loss_fn=loss, project_y=project_simplex,
+                                 stiefel_mask={"w": True, "b": False})
+        modern = MinimaxProblem(loss_fn=loss, project_y=project_simplex,
+                                manifold_map={"w": "stiefel",
+                                              "b": "euclidean"})
+    for p in (legacy, legacy2):
+        assert p.stiefel_mask == modern.stiefel_mask
+        assert jax.tree.map(lambda m: m.name, p.manifold_map,
+                            is_leaf=lambda s: isinstance(s, gbase.Manifold)) \
+            == jax.tree.map(lambda m: m.name, modern.manifold_map,
+                            is_leaf=lambda s: isinstance(s, gbase.Manifold))
+    gbase._warned_stiefel_mask = False     # leave global state clean-ish
+
+
+def test_fair_problem_uses_manifold_map_without_warning():
+    import warnings
+
+    from repro.objectives import fair
+    params = fair.init_cnn(jax.random.PRNGKey(0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        prob = fair.make_fair_problem(params)
+    assert prob.stiefel_mask == fair.cnn_stiefel_mask(params)
+
+
+def test_train_spec_equivalent_to_kwargs():
+    from repro import configs
+    from repro.launch.steps import TrainSpec, build_trainer
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    opt_kw, _ = build_trainer(cfg, 2, optimizer="gt-gda", topology="full")
+    opt_sp, _ = build_trainer(cfg, 2, TrainSpec(optimizer="gt-gda",
+                                                topology="full"))
+    assert type(opt_kw) is type(opt_sp)
+    assert opt_kw.gossip.topology == opt_sp.gossip.topology == "full"
+    assert opt_kw.gossip.comm == opt_sp.gossip.comm
+    assert opt_sp.gossip.elastic is None
+    # elastic threads through to the optimizer's engine
+    es = ElasticSpec(churn=ChurnSchedule(kind="random", leave_rate=0.1))
+    opt_el, _ = build_trainer(cfg, 2, TrainSpec(elastic=es))
+    assert isinstance(opt_el.engine, ElasticEngine)
+    assert opt_el.engine.elastic is es

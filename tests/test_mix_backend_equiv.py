@@ -236,7 +236,8 @@ def test_drgda_step_equivalent_across_backends():
         return jnp.sum(y * per_group) - 0.5 * jnp.sum(y ** 2)
 
     problem = MinimaxProblem(
-        loss_fn=loss_fn, stiefel_mask={"w": True, "bias": False},
+        loss_fn=loss_fn,
+        manifold_map={"w": "stiefel", "bias": "euclidean"},
         project_y=lambda y: jnp.clip(y, 0.0, 1.0))
     x0 = {"w": M.random_stiefel(jax.random.PRNGKey(0), d, r),
           "bias": jnp.zeros((4,))}

@@ -52,7 +52,7 @@ def _make_problem(seed=0):
         return jnp.dot(y, lg) - RHO * jnp.sum((y - 1.0 / G) ** 2)
 
     return MinimaxProblem(loss_fn=loss_fn, project_y=project_simplex,
-                          stiefel_mask={"w": True})
+                          manifold_map={"w": "stiefel"})
 
 
 def _init(seed=5):

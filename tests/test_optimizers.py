@@ -39,7 +39,7 @@ def _make_problem(seed=0):
         return project_simplex(1.0 / G + lg / (2 * RHO))
 
     return MinimaxProblem(loss_fn=loss_fn, project_y=project_simplex,
-                          stiefel_mask={"w": True}, y_star=y_star)
+                          manifold_map={"w": "stiefel"}, y_star=y_star)
 
 
 def _batches(seed=6, scale=0.1):
